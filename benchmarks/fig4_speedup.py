@@ -1,0 +1,89 @@
+"""Fig. 4 reproduction: speedup + runtime breakdown, 1-8 chips.
+
+(a) TinyLlama autoregressive, (b) TinyLlama prompt, (c) MobileBERT.
+Paper claims: 26.1x AR / 9.9x prompt @ 8 chips; 4.7x MobileBERT @ 4 chips;
+AR memory-dominated vs prompt compute-dominated.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.sim.siracusa import SiracusaConfig
+from repro.sim.simulator import simulate_model
+from repro.sim.workload import mobilebert_block, tinyllama_block
+
+PAPER = {"ar_8": 26.1, "prompt_8": 9.9, "mb_4": 4.7}
+
+
+def rows():
+    cfg = SiracusaConfig()
+    tl = get_config("tinyllama-42m")
+    mb = get_config("mobilebert")
+    out = []
+    for mode, chips in (("autoregressive", [1, 2, 4, 8]),
+                        ("prompt", [1, 2, 4, 8])):
+        base = None
+        for n in chips:
+            r = simulate_model(cfg, tinyllama_block(tl, mode, n), n, 8)
+            base = base or r["t_block"]
+            bt = r["breakdown_t"]
+            out.append({
+                "fig": f"4{'a' if mode == 'autoregressive' else 'b'}",
+                "model": f"tinyllama-{mode}", "chips": n,
+                "t_block_ms": r["t_block"] * 1e3,
+                "speedup": base / r["t_block"],
+                "regime": r["regime"],
+                "frac_comp": bt["comp"] / (r["t_model"] + 1e-30),
+                "frac_c2c": bt["c2c"] / (r["t_model"] + 1e-30),
+                "frac_l3": bt["l3_exposed"] / (r["t_model"] + 1e-30),
+            })
+    base = None
+    for n in [1, 2, 4]:
+        r = simulate_model(cfg, mobilebert_block(mb, n), n, 24)
+        base = base or r["t_block"]
+        bt = r["breakdown_t"]
+        out.append({
+            "fig": "4c", "model": "mobilebert", "chips": n,
+            "t_block_ms": r["t_block"] * 1e3,
+            "speedup": base / r["t_block"],
+            "regime": r["regime"],
+            "frac_comp": bt["comp"] / (r["t_model"] + 1e-30),
+            "frac_c2c": bt["c2c"] / (r["t_model"] + 1e-30),
+            "frac_l3": bt["l3_exposed"] / (r["t_model"] + 1e-30),
+        })
+    return out
+
+
+def derived():
+    rs = {(r["model"], r["chips"]): r for r in rows()}
+    ar8 = rs[("tinyllama-autoregressive", 8)]["speedup"]
+    pr8 = rs[("tinyllama-prompt", 8)]["speedup"]
+    mb4 = rs[("mobilebert", 4)]["speedup"]
+    return {
+        "ar_speedup8_sim_vs_paper": f"{ar8:.1f}/{PAPER['ar_8']}",
+        "prompt_speedup8_sim_vs_paper": f"{pr8:.1f}/{PAPER['prompt_8']}",
+        "mb_speedup4_sim_vs_paper": f"{mb4:.1f}/{PAPER['mb_4']}",
+        "ar_memory_dominated_1chip":
+            rs[("tinyllama-autoregressive", 1)]["frac_l3"] >
+            rs[("tinyllama-autoregressive", 1)]["frac_comp"],
+        "prompt_compute_dominated_1chip":
+            rs[("tinyllama-prompt", 1)]["frac_comp"] >=
+            max(rs[("tinyllama-prompt", 1)]["frac_l3"],
+                rs[("tinyllama-prompt", 1)]["frac_c2c"]),
+    }
+
+
+def main(csv=True):
+    out = rows()
+    if csv:
+        keys = list(out[0])
+        print(",".join(keys))
+        for r in out:
+            print(",".join(f"{r[k]:.4g}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+        for k, v in derived().items():
+            print(f"# {k}: {v}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

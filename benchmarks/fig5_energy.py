@@ -1,0 +1,76 @@
+"""Fig. 5 reproduction: energy x latency per block (default + scaled models).
+
+Paper claims: 0.64 mJ / 0.54 ms @ 8 chips TinyLlama AR (per block, §V-A
+reporting); energy drops when weights become fully resident (32+ chips on
+the scaled model); slight MobileBERT energy increase from kernel
+inefficiency at 4 chips.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.sim.siracusa import SiracusaConfig
+from repro.sim.simulator import simulate_model
+from repro.sim.workload import mobilebert_block, tinyllama_block
+
+PAPER = {"ar8_ms": 0.54, "ar8_mj": 0.64}
+
+
+def rows():
+    cfg = SiracusaConfig()
+    out = []
+    tl = get_config("tinyllama-42m")
+    tl64 = get_config("tinyllama-42m-64h")
+    mb = get_config("mobilebert")
+    for label, mcfg, mode, chips in (
+            ("tinyllama-ar", tl, "autoregressive", [1, 2, 4, 8]),
+            ("tinyllama-prompt", tl, "prompt", [1, 2, 4, 8]),
+            ("tinyllama64h-ar", tl64, "autoregressive", [8, 16, 32, 64]),
+            ("tinyllama64h-prompt", tl64, "prompt", [8, 16, 32, 64])):
+        for n in chips:
+            r = simulate_model(cfg, tinyllama_block(mcfg, mode, n), n, 8)
+            be = r["breakdown_e"]
+            out.append({"fig": "5", "model": label, "chips": n,
+                        "t_block_ms": r["t_block"] * 1e3,
+                        "e_block_mj": r["e_block"] * 1e3,
+                        "regime": r["regime"],
+                        "e_l3_frac": be["l3"] / (r["e_model"] + 1e-30)})
+    for n in [1, 2, 4]:
+        r = simulate_model(cfg, mobilebert_block(mb, n), n, 24)
+        out.append({"fig": "5c", "model": "mobilebert", "chips": n,
+                    "t_block_ms": r["t_block"] * 1e3,
+                    "e_block_mj": r["e_block"] * 1e3,
+                    "regime": r["regime"],
+                    "e_l3_frac": r["breakdown_e"]["l3"] /
+                    (r["e_model"] + 1e-30)})
+    return out
+
+
+def derived():
+    rs = {(r["model"], r["chips"]): r for r in rows()}
+    r8 = rs[("tinyllama-ar", 8)]
+    r32 = rs[("tinyllama64h-ar", 32)]
+    r16 = rs[("tinyllama64h-ar", 16)]
+    return {
+        "ar8_ms_sim_vs_paper": f"{r8['t_block_ms']:.2f}/{PAPER['ar8_ms']}",
+        "ar8_mj_sim_vs_paper": f"{r8['e_block_mj']:.2f}/{PAPER['ar8_mj']}",
+        "resident_at_32chips": r32["regime"] == "model",
+        "energy_drops_when_resident":
+            r32["e_block_mj"] < r16["e_block_mj"],
+    }
+
+
+def main(csv=True):
+    out = rows()
+    if csv:
+        keys = list(out[0])
+        print(",".join(keys))
+        for r in out:
+            print(",".join(f"{r[k]:.4g}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+        for k, v in derived().items():
+            print(f"# {k}: {v}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

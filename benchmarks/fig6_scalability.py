@@ -1,0 +1,65 @@
+"""Fig. 6 reproduction: scaled TinyLlama (64 heads) on 2-64 chips.
+
+Paper claims: quasi-linear AR speedup up to 60.1x @ 64 chips; prompt mode
+linear to 16 chips then diminishing; 1.3x energy reduction @ 64 chips.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.sim.siracusa import SiracusaConfig
+from repro.sim.simulator import simulate_model
+from repro.sim.workload import tinyllama_block
+
+PAPER = {"ar_64": 60.1, "energy_ratio_64": 1.3}
+
+CHIPS = [1, 2, 4, 8, 16, 32, 64]
+
+
+def rows():
+    cfg = SiracusaConfig()
+    tl64 = get_config("tinyllama-42m-64h")
+    out = []
+    for mode in ("autoregressive", "prompt"):
+        base_t = base_e = None
+        for n in CHIPS:
+            r = simulate_model(cfg, tinyllama_block(tl64, mode, n), n, 8)
+            base_t = base_t or r["t_block"]
+            base_e = base_e or r["e_block"]
+            out.append({"fig": "6", "model": f"tinyllama64h-{mode}",
+                        "chips": n,
+                        "t_block_ms": r["t_block"] * 1e3,
+                        "speedup": base_t / r["t_block"],
+                        "energy_ratio_vs_1chip": base_e / r["e_block"],
+                        "regime": r["regime"]})
+    return out
+
+
+def derived():
+    rs = {(r["model"], r["chips"]): r for r in rows()}
+    ar = rs[("tinyllama64h-autoregressive", 64)]
+    pr16 = rs[("tinyllama64h-prompt", 16)]
+    pr64 = rs[("tinyllama64h-prompt", 64)]
+    return {
+        "ar_speedup64_sim_vs_paper": f"{ar['speedup']:.1f}/{PAPER['ar_64']}",
+        "ar_energy_ratio64_sim_vs_paper":
+            f"{ar['energy_ratio_vs_1chip']:.2f}/{PAPER['energy_ratio_64']}",
+        "prompt_diminishing_returns_past_16":
+            (pr64["speedup"] / pr16["speedup"]) < (64 / 16) * 0.75,
+    }
+
+
+def main(csv=True):
+    out = rows()
+    if csv:
+        keys = list(out[0])
+        print(",".join(keys))
+        for r in out:
+            print(",".join(f"{r[k]:.4g}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+        for k, v in derived().items():
+            print(f"# {k}: {v}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Kernel microbenchmarks: pure-JAX reference path wall-time on CPU +
+analytic TPU roofline estimates for the Pallas kernels.
+
+(Pallas interpret mode is a correctness tool, not a performance proxy, so
+TPU numbers are roofline-derived: bytes/FLOPs of the kernel's tiling over
+the v5e constants.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def rows():
+    out = []
+    rng = np.random.RandomState(0)
+    # decode attention: the paper's AR GEMV regime
+    for S in (4096, 32768):
+        B, H, D = 4, 8, 128
+        q = jnp.asarray(rng.randn(B, H, D), jnp.float32)
+        k = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+        v = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+        ln = jnp.full((B,), S, jnp.int32)
+        f = jax.jit(lambda q, k, v, ln: ref.ref_decode_attention(q, k, v, ln))
+        t = _time(f, q, k, v, ln)
+        bytes_ = 2 * B * H * S * D * 2                     # bf16 on TPU
+        flops = 4 * B * H * S * D
+        out.append({"kernel": "decode_attention", "shape": f"S={S}",
+                    "cpu_us_per_call": t * 1e6,
+                    "tpu_roofline_us": max(bytes_ / HBM_BW,
+                                           flops / PEAK_FLOPS) * 1e6,
+                    "arithmetic_intensity": flops / bytes_})
+    # flash attention prefill tile
+    for S in (1024, 4096):
+        H, D = 4, 128
+        q = jnp.asarray(rng.randn(H, S, D), jnp.float32)
+        k = jnp.asarray(rng.randn(H, S, D), jnp.float32)
+        v = jnp.asarray(rng.randn(H, S, D), jnp.float32)
+        f = jax.jit(lambda q, k, v: ref.ref_flash_attention(q, k, v))
+        t = _time(f, q, k, v)
+        flops = 2 * H * S * S * D * 2 / 2                 # causal half
+        bytes_ = 3 * H * S * D * 2 + H * S * D * 2
+        out.append({"kernel": "flash_attention", "shape": f"S={S}",
+                    "cpu_us_per_call": t * 1e6,
+                    "tpu_roofline_us": max(bytes_ / HBM_BW,
+                                           flops / PEAK_FLOPS) * 1e6,
+                    "arithmetic_intensity": flops / bytes_})
+    # matmul (prompt-mode GEMM)
+    for M, K, N in ((512, 512, 2048), (2048, 2048, 2048)):
+        a = jnp.asarray(rng.randn(M, K), jnp.float32)
+        b = jnp.asarray(rng.randn(K, N), jnp.float32)
+        f = jax.jit(ref.ref_matmul)
+        t = _time(f, a, b)
+        flops = 2 * M * K * N
+        bytes_ = (M * K + K * N + M * N) * 2
+        out.append({"kernel": "matmul", "shape": f"{M}x{K}x{N}",
+                    "cpu_us_per_call": t * 1e6,
+                    "tpu_roofline_us": max(bytes_ / HBM_BW,
+                                           flops / PEAK_FLOPS) * 1e6,
+                    "arithmetic_intensity": flops / bytes_})
+    # ssd scan
+    S, H, P, N = 2048, 8, 64, 64
+    x = jnp.asarray(rng.randn(S, H, P), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.randn(S, H)) * 0.05, jnp.float32)
+    Bm = jnp.asarray(rng.randn(S, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(S, N), jnp.float32)
+    A = -jnp.asarray(np.abs(rng.rand(H)) + 0.5, jnp.float32)
+    f = jax.jit(lambda *a: ref.ref_ssd_scan(*a)[0])
+    t = _time(f, x, dt, Bm, Cm, A)
+    flops = S * H * P * N * 6
+    bytes_ = (S * H * P * 2 + 2 * S * N * 2) * 2
+    out.append({"kernel": "ssd_scan", "shape": f"S={S}",
+                "cpu_us_per_call": t * 1e6,
+                "tpu_roofline_us": max(bytes_ / HBM_BW,
+                                       flops / PEAK_FLOPS) * 1e6,
+                "arithmetic_intensity": flops / bytes_})
+    return out
+
+
+def main(csv=True):
+    out = rows()
+    if csv:
+        keys = list(out[0])
+        print(",".join(keys))
+        for r in out:
+            print(",".join(f"{r[k]:.4g}" if isinstance(r[k], float)
+                           else str(r[k]) for k in keys))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Roofline summary over the dry-run results (EXPERIMENTS.md §Roofline feed).
+
+Reads results_dryrun_sp.json (written by launch.dryrun --all) and prints the
+per-cell three-term table; falls back to computing the analytic terms inline
+(no 512-device mesh needed — the ledger is traced on a 1-device mesh with
+axis sizes spoofed) when the file is missing.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.roofline import fmt_seconds
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "results_dryrun_sp.json")
+
+
+def rows(path=RESULTS):
+    if not os.path.exists(path):
+        return inline_rows()
+    out = []
+    for rec in json.load(open(path)):
+        if rec.get("status") != "ok":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec.get("mesh", ""),
+                        "status": rec.get("status", "?"),
+                        "bound": rec.get("reason", "")[:40]})
+            continue
+        r = rec["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "t_compute_ms": r["t_compute"] * 1e3,
+            "t_memory_ms": r["t_memory"] * 1e3,
+            "t_collective_ms": r["t_collective"] * 1e3,
+            "bound": r["bound"],
+            "useful_ratio": r["useful_ratio"],
+            "roofline_fraction": r["roofline_fraction"],
+            "mfu_upper_bound": r["mfu_upper_bound"],
+        })
+    return out
+
+
+def inline_rows():
+    """Analytic-only fallback (1-device host)."""
+    from repro.configs import ASSIGNED, SHAPES, get_config, shape_supported
+    from repro.core import analytics, collectives as cc
+    from repro.core.partition import ShardingPlan
+    from repro.launch import roofline as rl
+    out = []
+    sizes = {"data": 16, "model": 16}
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, reason = shape_supported(cfg, shape)
+            if not ok:
+                out.append({"arch": arch, "shape": sname, "mesh": "16x16",
+                            "status": "skipped", "bound": reason[:40]})
+                continue
+            plan = ShardingPlan(
+                tp=16, seq_shard_kv=(sname == "long_500k"
+                                     and cfg.family != "ssm"),
+                remat="block" if shape.kind == "train" else "none")
+            cc.set_axis_sizes(sizes)
+            cost = analytics.step_cost(cfg, plan, shape, sizes)
+            roof = rl.build_roofline(arch, sname, "16x16", cost, 0.0, {},
+                                     analytics.model_flops_ideal(cfg, shape),
+                                     256)
+            out.append({"arch": arch, "shape": sname, "mesh": "16x16",
+                        "status": "ok(analytic)",
+                        "t_compute_ms": roof.t_compute * 1e3,
+                        "t_memory_ms": roof.t_memory * 1e3,
+                        "t_collective_ms": 0.0,
+                        "bound": roof.bound,
+                        "useful_ratio": roof.useful_ratio,
+                        "roofline_fraction": roof.roofline_fraction,
+                        "mfu_upper_bound": roof.mfu_upper_bound})
+    return out
+
+
+def main(csv=True):
+    out = rows()
+    if csv:
+        keys = ["arch", "shape", "mesh", "status", "t_compute_ms",
+                "t_memory_ms", "t_collective_ms", "bound", "useful_ratio",
+                "roofline_fraction", "mfu_upper_bound"]
+        print(",".join(keys))
+        for r in out:
+            print(",".join(
+                f"{r[k]:.4g}" if isinstance(r.get(k), float)
+                else str(r.get(k, "")) for k in keys))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` style CSV sections.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    sections = [
+        ("fig4_speedup (paper Fig.4: speedup + breakdown)",
+         "benchmarks.fig4_speedup"),
+        ("fig5_energy (paper Fig.5: energy x latency)",
+         "benchmarks.fig5_energy"),
+        ("fig6_scalability (paper Fig.6: 2-64 chips)",
+         "benchmarks.fig6_scalability"),
+        ("table1_properties (paper Table I: zero-dup + two-sync audit)",
+         "benchmarks.table1_properties"),
+        ("kernels (Pallas kernel rooflines + CPU ref timings)",
+         "benchmarks.kernels_bench"),
+        ("roofline (40-cell dry-run three-term table)",
+         "benchmarks.roofline_bench"),
+    ]
+    failed = []
+    for title, mod in sections:
+        print(f"\n==== {title} ====")
+        t0 = time.time()
+        try:
+            __import__(mod, fromlist=["main"]).main()
+            print(f"# section_seconds={time.time() - t0:.1f}")
+        except Exception:  # noqa: BLE001
+            failed.append(mod)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED sections: {failed}")
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Host-offload streaming: the paper's L3->L2 double buffering, one tier up.
+
+The paper streams the NEXT transformer block's weights into on-chip memory
+while the current block computes (§V-A).  This example runs the same
+discipline between host DRAM ("L3") and device memory ("L2"): layer-group
+weights live on host; group i+1 stages via async ``jax.device_put`` while
+group i computes.  It reports achieved overlap and the bandwidth the paper's
+§V-C analysis says is needed for streaming to be free.
+
+    PYTHONPATH=src python examples/offload_streaming.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.offload import OffloadExecutor, required_bandwidth
+
+
+def main():
+    # a toy "model": 8 groups of 2 matmul layers, weights held on HOST
+    E, F, B, S = 512, 2048, 8, 128
+    n_groups = 8
+    rng = np.random.RandomState(0)
+    host_groups = [
+        {"w1": rng.randn(E, F).astype(np.float32) * 0.02,
+         "w2": rng.randn(F, E).astype(np.float32) * 0.02}
+        for _ in range(n_groups)
+    ]
+
+    @jax.jit
+    def group_fwd(x, p):
+        h = jax.nn.silu(x @ p["w1"])
+        return x + h @ p["w2"]
+
+    def fn(x, p):
+        return group_fwd(x, p)
+
+    x = jnp.asarray(rng.randn(B, S, E), jnp.float32)
+
+    # cold pass (includes compile)
+    execu = OffloadExecutor(host_groups)
+    y = execu.stream_forward(x, [fn] * n_groups)
+    jax.block_until_ready(y)
+
+    # measured pass
+    execu = OffloadExecutor(host_groups)
+    t0 = time.perf_counter()
+    y = execu.stream_forward(x, [fn] * n_groups)
+    jax.block_until_ready(y)
+    wall = time.perf_counter() - t0
+
+    bytes_per_group = sum(a.nbytes for a in host_groups[0].values())
+    st = execu.stats
+    print(f"groups={st.groups}  wall={wall*1e3:.1f}ms  "
+          f"stage(dispatch)={st.stage_s*1e3:.1f}ms  "
+          f"compute(dispatch)={st.compute_s*1e3:.1f}ms")
+    print(f"weights/group = {bytes_per_group/1e6:.1f} MB")
+    need = required_bandwidth(bytes_per_group, wall / st.groups)
+    print(f"host-link bandwidth for FREE streaming (paper §V-C logic): "
+          f">= {need/1e9:.2f} GB/s")
+    print(f"on TPU v5e: PCIe ~{32:.0f} GB/s => streaming is "
+          f"{'free' if need < 32e9 else 'exposed'} at this compute intensity")
+    # correctness vs all-resident execution
+    ref = x
+    for p in host_groups:
+        ref = group_fwd(ref, jax.device_put(p))
+    err = float(jnp.max(jnp.abs(ref - y)))
+    print(f"max |offloaded - resident| = {err:.2e}")
+    assert err < 1e-5
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

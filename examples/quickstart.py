@@ -1,0 +1,61 @@
+"""Quickstart: the paper's partitioning in ~60 lines.
+
+Builds a reduced qwen3 model, shards it with the paper's head-parallel /
+F-sliced plan, runs a train step and a decode step, and prints the audited
+communication ledger — showing the two-synchronizations-per-block contract.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.core import collectives as cc
+from repro.core import steps
+from repro.core.partition import ShardingPlan, duplication_report
+from repro.launch.mesh import host_mesh
+
+
+def main():
+    cfg = reduced(get_config("qwen3-0.6b"))
+    plan = ShardingPlan(tp=1)             # try tp=4 with 4+ devices
+    mesh = host_mesh(tp=plan.tp, dp=1)
+    print(f"arch={cfg.name}  layers={cfg.n_layers}  d_model={cfg.d_model}")
+
+    # --- the paper's §IV properties, audited --------------------------------
+    rep = duplication_report(cfg, ShardingPlan(tp=4))
+    print(f"zero-dup core: {rep['zero_dup_core']}  "
+          f"(kv-dup fraction {rep['dup_fraction']:.4f}, "
+          f"padding {rep['pad_fraction']:.4f})")
+
+    # --- one train step -------------------------------------------------------
+    shape = ShapeConfig("demo", "train", 64, 2)
+    state = steps.init_train_state(cfg, plan)
+    train_step, _ = steps.make_train_step(cfg, plan, mesh, shape=shape)
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 64)), jnp.int32)
+    cc.LEDGER.start()
+    with mesh:
+        state, stats = jax.jit(train_step)(state,
+                                           {"tokens": tokens, "labels": tokens})
+    cc.LEDGER.stop()
+    print(f"train loss={float(stats['loss']):.4f} "
+          f"grad_norm={float(stats['grad_norm']):.3f}")
+    print(f"block syncs audited: {cc.LEDGER.sync_count('block/'):.0f} "
+          f"(= 2 x {cfg.n_layers} layers)")
+
+    # --- one decode step -------------------------------------------------------
+    dshape = ShapeConfig("demo-d", "decode", 64, 2)
+    decode_step, _, _ = steps.make_decode_step(cfg, plan, mesh, dshape)
+    cache = steps.zero_cache_for(cfg, plan, mesh, 2, 64)
+    with mesh:
+        logits, cache = jax.jit(decode_step)(
+            state["params"], cache, tokens[:, :1], jnp.zeros((2,), jnp.int32))
+    print(f"decode logits: {logits.shape}, argmax={int(logits[0].argmax())}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

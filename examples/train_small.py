@@ -1,0 +1,29 @@
+"""End-to-end training driver with checkpointing + auto-resume.
+
+Default: a quick CPU-sized run.  ``--full`` trains the real TinyLlama-42M
+(~42M params — the '~100M-class' driver; a few hundred steps are feasible
+on real hardware, and the config/step/ckpt machinery is identical):
+
+    PYTHONPATH=src python examples/train_small.py            # smoke
+    PYTHONPATH=src python examples/train_small.py --full     # 42M params
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    if "--full" in sys.argv:
+        args = ["--arch", "tinyllama-42m", "--steps", "300", "--batch", "8",
+                "--seq-len", "256", "--ckpt-dir", "/tmp/repro_ckpt_full",
+                "--ckpt-every", "50", "--auto-resume"]
+    else:
+        args = ["--arch", "tinyllama-42m", "--smoke", "--steps", "30",
+                "--batch", "4", "--seq-len", "64",
+                "--ckpt-dir", "/tmp/repro_ckpt_smoke", "--ckpt-every", "10",
+                "--auto-resume", "--log-every", "5"]
+    return train_main(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""Elastic resharding: restore a checkpoint under a DIFFERENT ShardingPlan.
+
+Mechanism: the sharded layouts are invertible (``unshard_param`` strips
+padding / de-duplicates KV slots back to canonical tensors), so a
+checkpoint written on tp=16 restores onto tp=4 (or any mesh) by
+canonicalize -> re-scatter.  This is the substrate for elastic scaling and
+for recovering onto a degraded fleet after node loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model import (_init_full, _is_spec, _map_template,
+                              _mask_invalid_heads, _with_reps, model_template,
+                              shard_full)
+from repro.core.partition import ModelLayout, dim_layout, model_layout
+
+
+def unshard_param(spec, sharded, cfg, plan, lay: ModelLayout):
+    """Inverse of shard_full: sharded layout -> canonical full tensor."""
+    kind, tp = spec.kind, plan.tp
+    x = jnp.asarray(sharded)
+    if kind == "replicated":
+        return x
+    hl = lay.ssm if kind.startswith("ssm_") else lay.attn
+    k = kind[4:] if kind.startswith("ssm_") else kind
+    full = spec.full
+
+    if k == "col_heads":
+        y = jnp.moveaxis(x, 0, 1).reshape(full[0], hl.hq_pad, full[2])
+        return y[:, :full[1]]
+    if k == "col_head_vec":
+        y = jnp.moveaxis(x, 0, 1).reshape(full[0], hl.hq_pad)
+        return y[:, :full[1]]
+    if k == "row_heads":
+        y = x.reshape(hl.hq_pad, full[1], full[2])
+        return y[:full[0]]
+    if k == "head_vec":
+        return x.reshape(hl.hq_pad)[:full[0]]
+    if k == "flat_heads":
+        return x.reshape(hl.hq_pad, full[1])[:full[0]]
+    if k == "conv_heads":
+        return x.reshape(hl.hq_pad, full[1], full[2])[:full[0]]
+    if k == "kv_heads":
+        # slots duplicate kv heads; take the first slot holding each head
+        kvm = np.asarray(hl.kv_map).reshape(-1)        # (tp*n_kv_loc,)
+        y = jnp.moveaxis(x, 0, 1).reshape(full[0], tp * hl.n_kv_loc, full[2])
+        first = [int(np.nonzero(kvm == h)[0][0]) for h in range(hl.n_kv)]
+        return y[:, jnp.asarray(first)]
+    if k == "col_dim":
+        dl = dim_layout(full[1], tp)
+        y = jnp.moveaxis(x, 0, 1).reshape(full[0], dl.n_pad)
+        return y[:, :full[1]]
+    if k == "row_dim":
+        dl = dim_layout(full[0], tp)
+        return x.reshape(dl.n_pad, full[1])[:full[0]]
+    if k == "vocab":
+        return x.reshape(lay.vocab.n_pad, full[1])[:full[0]]
+    if k == "moe_col":
+        if plan.moe_mode == "ep":
+            return x.reshape(full)
+        dl = dim_layout(full[2], tp)
+        y = jnp.moveaxis(x, 0, 2).reshape(full[0], full[1], dl.n_pad)
+        return y[..., :full[2]]
+    if k == "moe_row":
+        if plan.moe_mode == "ep":
+            return x.reshape(full)
+        dl = dim_layout(full[1], tp)
+        # (tp, n_exp, f_loc, E) -> (n_exp, tp*f_loc, E)
+        y = jnp.moveaxis(x, 0, 1).reshape(full[0], dl.n_pad, full[2])
+        return y[:, :full[1]]
+    raise ValueError(kind)
+
+
+class _SpecLeaf:
+    """Opaque leaf pairing a ParamSpec with its layer-group rep count, so a
+    spec tree with the SAME structure as the param tree can be tree_map'd
+    against it (robust to pytree key ordering)."""
+
+    def __init__(self, spec, reps):
+        self.spec, self.reps = spec, reps
+
+
+def spec_tree(cfg):
+    return _map_template(_with_reps(cfg, model_template(cfg)),
+                         lambda spec, reps: _SpecLeaf(spec, reps))
+
+
+def reshard_params(params, cfg, plan_from, plan_to):
+    """params saved under plan_from -> layout for plan_to (canonicalize +
+    re-scatter every leaf; layer-group stacking is preserved)."""
+    lay_from = model_layout(cfg, plan_from)
+    lay_to = model_layout(cfg, plan_to)
+
+    def mk(sl, leaf):
+        spec, reps = sl.spec, sl.reps
+        leaves = []
+        for r in range(max(reps, 1)):
+            src = leaf[r] if reps else leaf
+            full = unshard_param(spec, src, cfg, plan_from, lay_from)
+            sh = shard_full(spec, full, cfg, plan_to, lay_to)
+            sh = _mask_invalid_heads(spec, sh, cfg, plan_to, lay_to)
+            leaves.append(sh.astype(src.dtype))
+        return jnp.stack(leaves) if reps else leaves[0]
+
+    return jax.tree_util.tree_map(
+        mk, spec_tree(cfg), params,
+        is_leaf=lambda x: isinstance(x, _SpecLeaf))

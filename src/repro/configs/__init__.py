@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ASSIGNED, PAPER_MODELS, SHAPES, LayerGroup, LayerSpec, ModelConfig,
+    ShapeConfig, get_config, list_configs, reduced, register, shape_supported,
+)

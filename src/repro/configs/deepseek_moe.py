@@ -1,0 +1,31 @@
+"""deepseek-moe-16b — fine-grained MoE: 64 routed experts top-6 + 2 shared.
+
+[arXiv:2401.06066; hf tier] 28L d_model=2048 16H (kv=16) vocab=102400,
+per-expert d_ff=1408; first layer uses a dense FFN (width 10944) per the
+release.  Shared experts = 2 x 1408.
+"""
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,                # routed-expert width (pool-specified)
+    vocab_size=102_400,
+    n_experts=64,
+    top_k=6,
+    n_shared_experts=2,
+    moe_d_ff=1408,
+    first_k_dense=1,
+    dense_ff_override=10_944,
+    rope_theta=10_000.0,
+    act="silu",
+    gated_ffn=True,
+    tie_embeddings=False,
+    max_seq_len=16_384,
+    source="arXiv:2401.06066; hf tier",
+))

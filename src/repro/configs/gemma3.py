@@ -1,0 +1,53 @@
+"""gemma3-12b / gemma3-27b — dense decoders, 5:1 local:global attention.
+
+[hf:google/gemma-3-*-pt] GQA + qk-norm, sliding window 1024 on local layers,
+128k context.  head_dim is 256 (12b) / 128 (27b) per the released configs
+(decoupled from d_model/n_heads).
+"""
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15_360,
+    vocab_size=262_144,
+    qk_norm=True,
+    sandwich_norm=True,
+    scale_embed=True,
+    local_global_ratio=5,
+    sliding_window=1024,
+    rope_theta=1_000_000.0,
+    act="gelu",
+    gated_ffn=True,
+    tie_embeddings=True,
+    max_seq_len=131_072,
+    source="hf:google/gemma-3-12b-pt; unverified tier",
+))
+
+register(ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21_504,
+    vocab_size=262_144,
+    qk_norm=True,
+    sandwich_norm=True,
+    scale_embed=True,
+    local_global_ratio=5,
+    sliding_window=1024,
+    rope_theta=1_000_000.0,
+    act="gelu",
+    gated_ffn=True,
+    tie_embeddings=True,
+    max_seq_len=131_072,
+    source="hf:google/gemma-3-27b-pt; unverified tier",
+))

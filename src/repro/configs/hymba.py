@@ -1,0 +1,36 @@
+"""hymba-1.5b — hybrid: parallel attention + mamba heads in every block.
+
+[arXiv:2411.13676; hf tier] 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16.  Both head groups are sharded head-parallel on
+the model axis; their outputs fuse before the single post-mixer psum, so the
+paper's two-sync contract holds.  25 Q / 5 KV heads are not divisible by
+tp=16 => heads are zero-padded to the next multiple (DESIGN.md deviation:
+"head padding for indivisible head counts").  Full attention at layers
+{0, 16, 31}; sliding window 1024 elsewhere; meta-tokens omitted (backbone
+dims only).
+"""
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32_001,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,          # 50 SSM heads (d_inner=3200)
+    ssm_conv=4,
+    ssm_chunk=256,
+    sliding_window=1024,
+    rope_theta=10_000.0,
+    act="silu",
+    gated_ffn=True,
+    tie_embeddings=True,
+    max_seq_len=1_048_576,
+    source="arXiv:2411.13676; hf tier",
+))

@@ -1,0 +1,20 @@
+"""mistral-large-123b — dense decoder. [hf:mistralai/Mistral-Large-Instruct-2407]"""
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12_288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28_672,
+    vocab_size=32_768,
+    rope_theta=1_000_000.0,
+    act="silu",
+    gated_ffn=True,
+    tie_embeddings=False,
+    max_seq_len=131_072,
+    source="hf:mistralai/Mistral-Large-Instruct-2407; unverified tier",
+))

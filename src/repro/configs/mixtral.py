@@ -1,0 +1,24 @@
+"""mixtral-8x22b — sparse MoE, 8 experts top-2, SWA. [arXiv:2401.04088; hf tier]"""
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16_384,
+    vocab_size=32_768,
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=16_384,
+    sliding_window=4096,      # pool note: SWA
+    rope_theta=1_000_000.0,
+    act="silu",
+    gated_ffn=True,
+    tie_embeddings=False,
+    max_seq_len=65_536,
+    source="arXiv:2401.04088; hf tier",
+))

@@ -1,0 +1,28 @@
+"""pixtral-12b — VLM: pixtral-ViT frontend (stub) + mistral-nemo-like decoder.
+
+[hf:mistralai/Pixtral-12B-2409] Backbone only per the assignment spec: 40L
+d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.  The vision frontend is
+a STUB — ``input_specs()`` provides 1024 precomputed patch embeddings that
+are spliced into the token sequence.
+"""
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=131_072,
+    frontend="vision_patches",
+    n_frontend_embeds=1024,
+    rope_theta=1_000_000.0,
+    act="silu",
+    gated_ffn=True,
+    tie_embeddings=False,
+    max_seq_len=131_072,
+    source="hf:mistralai/Pixtral-12B-2409; unverified tier (backbone only)",
+))

@@ -1,0 +1,21 @@
+"""qwen3-0.6b — dense decoder with qk-norm + GQA. [hf:Qwen/Qwen3-0.6B; hf tier]"""
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    n_layers=28,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+    gated_ffn=True,
+    tie_embeddings=True,
+    max_seq_len=40_960,
+    source="hf:Qwen/Qwen3-0.6B; hf tier",
+))

@@ -1,0 +1,31 @@
+"""seamless-m4t-large-v2 — encoder-decoder, multimodal (audio frontend stub).
+
+[arXiv:2308.11596; hf tier] 24L enc + 24L dec, d_model=1024 16H (kv=16)
+d_ff=8192 vocab=256206.  Per the assignment spec the modality frontend is a
+STUB: ``input_specs()`` provides precomputed frame embeddings (B, S, E) to
+the encoder; the decoder consumes tokens and cross-attends to the encoder
+memory (fixed 4096 frames for decode shapes).
+"""
+from repro.configs.base import ModelConfig, register
+
+register(ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,               # decoder layers
+    n_enc_layers=24,
+    enc_seq_len=4096,          # encoder memory length for decode shapes
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256_206,
+    frontend="audio_frames",
+    rope_theta=10_000.0,
+    act="gelu",
+    gated_ffn=False,
+    norm="layernorm",
+    tie_embeddings=True,
+    max_seq_len=65_536,
+    source="arXiv:2308.11596; hf tier (backbone dims; frontend stubbed per spec)",
+))

@@ -1,0 +1,181 @@
+"""Attention: chunked flash (prefill/train) + single-token decode.
+
+Pure-JAX implementations used for CPU validation and for the 512-device
+dry-run lowering (XLA:TPU fuses these well); the Pallas kernels in
+``repro.kernels`` implement the same contracts for real-TPU execution and
+are validated against ``repro.kernels.ref`` which in turn matches these.
+
+Shapes follow the per-shard grouped-GQA layout from ``partition.head_layout``:
+
+    q: (B, G, R, Sq, D)   — G local kv slots, R q-heads per slot
+    k/v: (B, G, Skv, D)
+
+Sliding-window attention slices the kv stream (linear cost); full causal
+attention scans all kv chunks with masking (the known 2x upper-triangle
+overhead of scan-based flash — eliminated in the Pallas kernel via grid
+pruning and accounted for explicitly in the roofline analytics).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import collectives as cc
+
+NEG = -1e30
+
+
+def _online_chunk(acc, m, l, q, k, v, mask, scale, softcap=0.0):
+    """One online-softmax update.  q:(...,R,Sq,D) k:(...,C,D) mask:(...,Sq,C)."""
+    s = jnp.einsum("...rsd,...cd->...rsc", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[..., None, :, :], s, NEG)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None]) * mask[..., None, :, :]
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("...rsc,...cd->...rsd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * corr[..., None] + pv
+    return acc_new, m_new, l_new
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, q_offset=0, kv_offset=0,
+                    q_block=512, kv_block=512):
+    """Chunked attention.  Returns (B, G, R, Sq, D) in q.dtype."""
+    B, G, R, Sq, D = q.shape
+    Skv = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+
+    # pad sequences to block multiples
+    Sq_p = -(-Sq // q_block) * q_block
+    Skv_p = -(-Skv // kv_block) * kv_block
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, Sq_p - Sq), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Skv_p - Skv), (0, 0)))
+
+    nq = Sq_p // q_block
+    q_blocked = q.reshape(B, G, R, nq, q_block, D)
+
+    windowed = causal and window > 0 and Skv_p > window + q_block
+    if windowed:
+        # slice length covering [q_end - window, q_end) for the whole q block
+        L = min(Skv_p, -(-(window + q_block) // kv_block) * kv_block)
+    else:
+        L = Skv_p
+    n_kv = L // kv_block
+
+    def one_q_block(qi, qb):  # qb: (B, G, R, q_block, D)
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+        if windowed:
+            # k-array index of the window start for this q block
+            start = jnp.clip(q_offset + (qi + 1) * q_block - L - kv_offset,
+                             0, Skv_p - L)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, L, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, L, axis=2)
+            kv_base = kv_offset + start
+        else:
+            ks, vs, kv_base = k, v, kv_offset
+
+        def kv_step(carry, c):
+            acc, m, l = carry
+            kc = jax.lax.dynamic_slice_in_dim(ks, c * kv_block, kv_block, axis=2)
+            vc = jax.lax.dynamic_slice_in_dim(vs, c * kv_block, kv_block, axis=2)
+            kv_pos = kv_base + c * kv_block + jnp.arange(kv_block)
+            mask = jnp.ones((q_block, kv_block), bool)
+            mask &= (kv_pos[None, :] < kv_offset + Skv)        # kv padding
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            mask = jnp.broadcast_to(mask, (B, G, q_block, kv_block))
+            return _online_chunk(acc, m, l, qb, kc, vc, mask, scale, softcap), None
+
+        acc0 = jnp.zeros((B, G, R, q_block, D), jnp.float32)
+        m0 = jnp.full((B, G, R, q_block), NEG, jnp.float32)
+        l0 = jnp.zeros((B, G, R, q_block), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(n_kv))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    out = jax.lax.map(lambda args: one_q_block(*args),
+                      (jnp.arange(nq), jnp.moveaxis(q_blocked, 3, 0)))
+    out = jnp.moveaxis(out, 0, 3).reshape(B, G, R, Sq_p, D)
+    return out[:, :, :, :Sq].astype(q.dtype)
+
+
+def flash_attention_split(q, k, v, *, window=0, softcap=0.0, scale=None,
+                          q_block=512, kv_block=512, depth=3, q_offset=0):
+    """Recursive causal splitting (beyond-paper §Perf optimization).
+
+    The scan-based flash pays ~2x FLOPs on full-causal attention (every q
+    block visits every kv chunk, half masked).  Split the q range: the upper
+    half genuinely needs the full kv prefix; the lower half only needs the
+    first half of kv — a STATIC slice, so recursion is compile-time.  Cost
+    converges to (2/3) S^2 vs S^2 (waste 4/3 instead of 2) at depth >= 3.
+    Exact — validated against the ref oracle in tests.
+    """
+    Sq = q.shape[3]
+    if depth <= 0 or Sq < 4 * q_block:
+        return flash_attention(q, k, v, causal=True, window=window,
+                               softcap=softcap, scale=scale,
+                               q_offset=q_offset, q_block=q_block,
+                               kv_block=kv_block)
+    half = Sq // 2
+    o_hi = flash_attention(q[:, :, :, half:], k, v, causal=True,
+                           window=window, softcap=softcap, scale=scale,
+                           q_offset=q_offset + half, q_block=q_block,
+                           kv_block=kv_block)
+    o_lo = flash_attention_split(
+        q[:, :, :, :half], k[:, :, :q_offset + half],
+        v[:, :, :q_offset + half], window=window, softcap=softcap,
+        scale=scale, q_block=q_block, kv_block=kv_block, depth=depth - 1,
+        q_offset=q_offset)
+    return jnp.concatenate([o_lo, o_hi], axis=3)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=0,
+                     softcap=0.0, scale=None, seq_axes=(), tag="attn/decode"):
+    """q: (B, G, R, D); caches: (B, G, S_slots, D); slot_pos: (B, S_slots)
+    absolute position held by each slot (-1 = empty).  ``seq_axes``: mesh axes
+    the cache sequence dim is sharded over (long-context distributed
+    flash-decode: partial (m, l, acc) merged with an LSE-weighted psum —
+    the paper's partial-output hierarchical reduction applied to sequence).
+    """
+    B, G, R, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    kf = k_cache
+    s = jnp.einsum("bgrd,bgsd->bgrs", q, kf,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if window > 0:
+        valid &= slot_pos > (cur_pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None]) * valid[:, None, None, :]
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bgrs,bgsd->bgrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    if seq_axes:
+        gm = cc.psum_max(m, seq_axes, tag + "/m")
+        w = jnp.exp(m - gm)
+        l = cc.psum(l * w, seq_axes, tag + "/l")
+        acc = cc.psum(acc * w[..., None], seq_axes, tag + "/acc")
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.astype(q.dtype)

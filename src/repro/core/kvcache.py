@@ -1,0 +1,129 @@
+"""Per-layer decode caches (KV, SSM state, cross-attention KV).
+
+Global (pre-shard_map) layouts — heads carry an explicit tp*local dim
+sharded on the model axis, mirroring the weight convention:
+
+    kv.k / kv.v : (reps, B, tp * n_kv_loc, W, D)    W = window or seq budget
+    kv.pos      : (reps, B, W)  absolute position per slot (-1 = empty);
+                  ring-indexed (pos % W) for windowed layers
+    ssm.state   : (reps, B, tp * h_loc, P, N)  float32
+    ssm.conv_*  : (reps, B, K-1, channels)
+    cross.k/v   : (reps, B, tp * n_kv_loc, S_enc, D)
+
+For ``plan.seq_shard_kv`` (long-context decode) the W dim is additionally
+sharded over the data axes — each data shard holds a contiguous slice of the
+sequence and attention merges partials via LSE psums (attention.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ATTN_WINDOW, ModelConfig
+from repro.core.partition import ModelLayout, ShardingPlan
+
+
+def kv_window(cfg: ModelConfig, spec, budget: int) -> int:
+    if spec.attn == ATTN_WINDOW and cfg.sliding_window:
+        return min(budget, cfg.sliding_window)
+    return budget
+
+
+def layer_cache_template(cfg, plan, lay, spec, batch: int, budget: int,
+                         seq_sharded: bool, batch_sharded: bool = True):
+    """-> dict of (shape, dtype, pspec) triples for ONE layer (no reps dim)."""
+    out = {}
+    kvd = jnp.dtype(plan.kv_cache_dtype)
+    d = cfg.head_dim_
+    batch_axes = tuple(plan.dp_axes) if (batch_sharded and not seq_sharded) \
+        else None
+    seq_axes = tuple(plan.dp_axes) if seq_sharded else None
+    tpax = "model" if plan.tp > 1 else None   # head dims follow TP only
+    if "kv" in spec.cache_kinds():
+        W = kv_window(cfg, spec, budget)
+        wseq = seq_axes if (seq_sharded and W == budget) else None
+        out["kv"] = {
+            "k": ((batch, plan.tp * lay.attn.n_kv_loc, W, d), kvd,
+                  P(batch_axes, tpax, wseq, None)),
+            "v": ((batch, plan.tp * lay.attn.n_kv_loc, W, d), kvd,
+                  P(batch_axes, tpax, wseq, None)),
+            "pos": ((batch, W), jnp.int32, P(batch_axes, wseq)),
+        }
+    if "ssm" in spec.cache_kinds():
+        H, Pdim, N = lay.ssm.hq_loc, cfg.ssm_head_dim, cfg.ssm_state
+        K = cfg.ssm_conv
+        cx = plan.tp * H * Pdim
+        out["ssm"] = {
+            "state": ((batch, plan.tp * H, Pdim, N), jnp.float32,
+                      P(batch_axes, tpax, None, None)),
+            "conv_x": ((batch, K - 1, cx), jnp.dtype(cfg.dtype),
+                       P(batch_axes, None, tpax)),
+            "conv_B": ((batch, K - 1, N), jnp.dtype(cfg.dtype),
+                       P(batch_axes, None, None)),
+            "conv_C": ((batch, K - 1, N), jnp.dtype(cfg.dtype),
+                       P(batch_axes, None, None)),
+        }
+    if "cross_kv" in spec.cache_kinds():
+        S_enc = cfg.enc_seq_len
+        out["cross"] = {
+            "k": ((batch, plan.tp * lay.attn.n_kv_loc, S_enc, d), kvd,
+                  P(batch_axes, tpax, None, None)),
+            "v": ((batch, plan.tp * lay.attn.n_kv_loc, S_enc, d), kvd,
+                  P(batch_axes, tpax, None, None)),
+        }
+    return out
+
+
+def cache_template(cfg, plan, lay, batch: int, budget: int,
+                   batch_sharded: bool = True):
+    """Full cache: list (per layer group) of stacked templates."""
+    seq_sharded = plan.seq_shard_kv
+    groups = cfg.layer_groups()
+    tmpl = []
+    for g in groups:
+        per_pattern = []
+        for spec in g.pattern:
+            t = layer_cache_template(cfg, plan, lay, spec, batch, budget,
+                                     seq_sharded, batch_sharded)
+            per_pattern.append(_stack_template(t, g.n_reps))
+        tmpl.append(per_pattern)
+    return tmpl
+
+
+def _stack_template(t, reps):
+    return jax.tree_util.tree_map(
+        lambda trip: ((reps,) + trip[0], trip[1], P(*((None,) + tuple(trip[2])))),
+        t, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+        and isinstance(x[0], tuple))
+
+
+def abstract_cache(tmpl):
+    def mk(trip):
+        shape, dtype, _ = trip
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return _map_tmpl(tmpl, mk)
+
+
+def cache_pspecs(tmpl):
+    return _map_tmpl(tmpl, lambda trip: trip[2])
+
+
+def zero_cache(tmpl):
+    def mk(trip):
+        shape, dtype, _ = trip
+        if dtype == jnp.int32:       # pos slots start empty
+            return jnp.full(shape, -1, dtype)
+        return jnp.zeros(shape, dtype)
+    return _map_tmpl(tmpl, mk)
+
+
+def _map_tmpl(tmpl, fn):
+    return jax.tree_util.tree_map(
+        fn, tmpl,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+        and isinstance(x[0], tuple))

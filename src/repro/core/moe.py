@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN.
+
+Two distribution modes (``plan.moe_mode``):
+
+* ``tp`` — **paper-faithful**: every expert's intermediate dimension is
+  sliced across the model axis exactly like a dense FC layer (the paper's
+  F-slicing applied per expert).  No weight duplication, no extra
+  collectives: routed partial outputs fold into the block's single post-FFN
+  psum.  This is the only zero-duplication option when
+  ``n_experts < tp`` (mixtral: 8 experts on 16 shards).
+* ``ep`` — beyond-paper expert parallelism: experts sharded whole across the
+  model axis (requires ``n_experts % tp == 0``); tokens are exchanged with
+  two ``all_to_all``s.  Fewer, larger matmuls (MXU-friendlier) at the cost
+  of a different collective pattern — evaluated in the §Perf hillclimb.
+
+Routing uses capacity-bounded dispatch via sort + gather/scatter (no one-hot
+dispatch matmuls, so HLO FLOPs stay honest).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as cc
+from repro.core.layers import activation
+
+
+def _capacity(T: int, k: int, n_experts: int, factor: float) -> int:
+    """Expert capacity with a decode-safe floor: tiny token counts (decode
+    steps) get capacity >= min(T, 16) so adversarial routing cannot drop
+    tokens; the statistical capacity bound governs large T (prefill/train)."""
+    return max(int(factor * T * k / n_experts), min(T, 16), 1)
+
+
+def router_topk(x, w_router, top_k: int, n_experts: int):
+    """x: (T, E) -> (gates (T,k) f32 normalized, idx (T,k) i32)."""
+    logits = jnp.einsum("te,en->tn", x.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def _bucket_by_expert(x, idx, gates, n_experts: int, capacity: int):
+    """Scatter tokens into per-expert buckets.
+
+    Returns (buckets (n_exp, cap, E), combine info for scatter-back).
+    Tokens over capacity are dropped (standard MoE semantics).
+    """
+    T, k = idx.shape
+    E = x.shape[-1]
+    flat_e = idx.reshape(-1)                       # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_g = gates.reshape(-1)
+    # position of each (token, expert) pair within its expert bucket
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos_in_bucket = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e,
+                                                         side="left")
+    keep = pos_in_bucket < capacity
+    slot = jnp.where(keep, sorted_e * capacity + pos_in_bucket, n_experts * capacity)
+    src_t = flat_t[order]
+    buckets = jnp.zeros((n_experts * capacity + 1, E), x.dtype)
+    buckets = buckets.at[slot].set(x[src_t])
+    return (buckets[:-1].reshape(n_experts, capacity, E),
+            dict(slot=slot, src_t=src_t, gate=flat_g[order], keep=keep, T=T))
+
+
+def _combine(buckets_out, info, E):
+    """Scatter expert outputs back, weighted by gates."""
+    flat = jnp.concatenate(
+        [buckets_out.reshape(-1, E),
+         jnp.zeros((1, E), buckets_out.dtype)], axis=0)
+    picked = flat[jnp.minimum(info["slot"], flat.shape[0] - 1)]
+    w = jnp.where(info["keep"], info["gate"], 0.0).astype(picked.dtype)
+    out = jnp.zeros((info["T"], E), buckets_out.dtype)
+    return out.at[info["src_t"]].add(picked * w[:, None])
+
+
+def _expert_ffn(buckets, w_gate, w_up, w_down, act, gated):
+    """buckets: (n_exp, cap, E); weights: (n_exp, E, F), (n_exp, F, E)."""
+    if gated:
+        h = activation(jnp.einsum("nce,nef->ncf", buckets, w_gate), act) * \
+            jnp.einsum("nce,nef->ncf", buckets, w_up)
+    else:
+        h = activation(jnp.einsum("nce,nef->ncf", buckets, w_up), act)
+    return jnp.einsum("ncf,nfe->nce", h, w_down)
+
+
+def moe_ffn_tp(x, p, cfg, capacity_factor=1.25):
+    """Paper-faithful TP MoE.  x: (B, S, E) replicated; expert weights are
+    F-sliced: w_gate/w_up (n_exp, E, f_loc), w_down (n_exp, f_loc, E).
+    Returns the PARTIAL output (B, S, E) — summed in the block's post-FFN psum."""
+    B, S, E = x.shape
+    T = B * S
+    xt = x.reshape(T, E)
+    gates, idx = router_topk(xt, p["router"]["w"], cfg.top_k, cfg.n_experts)
+    capacity = _capacity(T, cfg.top_k, cfg.n_experts, capacity_factor)
+    buckets, info = _bucket_by_expert(xt, idx, gates, cfg.n_experts, capacity)
+    ex = p["experts"]
+    out = _expert_ffn(buckets, ex.get("w_gate"), ex["w_up"], ex["w_down"],
+                      cfg.act, cfg.gated_ffn)
+    y = _combine(out, info, E)
+    return y.reshape(B, S, E)
+
+
+def moe_ffn_ep(x, p, cfg, shard_idx, tp, capacity_factor=1.25):
+    """Expert-parallel MoE (beyond-paper variant).
+
+    Expert weights are stored whole, ``n_experts/tp`` per shard:
+    w_* (n_exp_loc, E, F_full).  With replicated activations (the paper's
+    layout) no all_to_all is needed: every shard buckets all tokens, runs
+    only its LOCAL experts, and emits a partial combine that folds into the
+    block's existing post-FFN psum — the two-sync contract is preserved
+    while matmuls become tp x larger per expert (MXU-friendlier than the
+    paper-faithful F=88 slices of deepseek-moe)."""
+    B, S, E = x.shape
+    T = B * S
+    n_loc = cfg.n_experts // tp
+    xt = x.reshape(T, E)
+    gates, idx = router_topk(xt, p["router"]["w"], cfg.top_k, cfg.n_experts)
+    capacity = _capacity(T, cfg.top_k, cfg.n_experts, capacity_factor)
+    buckets, info = _bucket_by_expert(xt, idx, gates, cfg.n_experts, capacity)
+    local = jax.lax.dynamic_slice_in_dim(buckets, shard_idx * n_loc, n_loc,
+                                         axis=0)
+    ex = p["experts"]
+    out_local = _expert_ffn(local, ex.get("w_gate"), ex["w_up"], ex["w_down"],
+                            cfg.act, cfg.gated_ffn)
+    out_full = jnp.zeros((cfg.n_experts, capacity, E), out_local.dtype)
+    out_full = jax.lax.dynamic_update_slice_in_dim(
+        out_full, out_local, shard_idx * n_loc, axis=0)
+    y = _combine(out_full, info, E)
+    return y.reshape(B, S, E)

@@ -1,0 +1,474 @@
+"""Jitted distributed entry points: train_step / prefill_step / decode_step.
+
+These wrap the per-shard forwards from ``model.py`` in ``jax.shard_map``
+with the paper's partitioning specs, then ``jax.jit``.  The same builders
+serve CPU smoke tests (1-device mesh), the TP-equivalence tests (8 host
+devices) and the 512-device production dry-run.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import collectives as cc
+from repro.core import kvcache, model
+from repro.core.partition import ShardingPlan, model_layout
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+def mesh_axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def prepare_ledger(mesh):
+    cc.set_axis_sizes(mesh_axis_sizes(mesh))
+
+
+def batch_axes(plan: ShardingPlan):
+    return tuple(plan.dp_axes) if len(plan.dp_axes) > 1 else plan.dp_axes[0]
+
+
+def n_dp(mesh, plan):
+    sizes = mesh_axis_sizes(mesh)
+    out = 1
+    for a in plan.dp_axes:
+        out *= sizes.get(a, 1)
+    return out
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def train_batch_template(cfg: ModelConfig, shape: ShapeConfig, plan):
+    """-> (ShapeDtypeStructs, PartitionSpecs) for a global train batch."""
+    B, S = shape.global_batch, shape.seq_len
+    bt = batch_axes(plan)
+    cp = tuple(plan.cp_axes) if plan.cp_axes else None
+    t = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    s = {"tokens": P(bt, cp), "labels": P(bt, cp)}
+    if cfg.is_encdec:
+        t["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        s["frames"] = P(bt, None, None)
+    if cfg.frontend == "vision_patches":
+        n = cfg.n_frontend_embeds
+        t["image_embeds"] = jax.ShapeDtypeStruct((B, n, cfg.d_model),
+                                                 jnp.bfloat16)
+        s["image_embeds"] = P(bt, None, None)
+    return t, s
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, plan, mesh, opt_cfg: Optional[AdamWConfig] = None,
+                    shape: Optional[ShapeConfig] = None, grad_transform=None,
+                    grad_accum: int = 1):
+    """-> (train_step(state, batch) -> (state, metrics), specs dict).
+
+    ``grad_accum`` > 1 splits the per-device batch into microbatches run
+    under lax.scan with summed gradients — bounds activation memory for
+    large models (the standard companion to selective remat; §Perf)."""
+    prepare_ledger(mesh)
+    lay = model_layout(cfg, plan)
+    pspecs = model.param_pspecs(cfg, plan)
+    opt_cfg = opt_cfg or AdamWConfig()
+    sizes = mesh_axis_sizes(mesh)
+    ndp = 1
+    for a in plan.grad_axes:
+        ndp *= sizes.get(a, 1)
+    inner = ("data",)
+    outer = ("pod",) if "pod" in mesh.axis_names else ()
+    _, bspecs = train_batch_template(cfg, shape, plan) if shape else (None, None)
+
+    def per_shard(params, batch):
+        def loss_fn(p, mb):
+            return model.forward_train(p, mb, cfg, plan, lay)
+
+        if grad_accum > 1:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                loss_a, g_a = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_a + l / grad_accum,
+                        jax.tree_util.tree_map(
+                            lambda a, b: a + b / grad_accum, g_a, g)), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            with cc.LEDGER.scaled(grad_accum):
+                (loss, grads), _ = jax.lax.scan(
+                    acc_step, (jnp.zeros((), jnp.float32), zeros), micro)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch))(params)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        # hierarchical DP reduction (paper's grouped tree adapted to pods);
+        # context-parallel shards also contribute gradients
+        if plan.dp_hierarchical and outer and not plan.cp_axes:
+            grads = cc.hierarchical_psum(grads, inner, outer, "dp/grads")
+        else:
+            grads = cc.psum(grads, plan.grad_axes, "dp/grads")
+        grads = jax.tree_util.tree_map(lambda g: g / ndp, grads)
+        loss = cc.psum(loss, plan.grad_axes, "dp/loss") / ndp
+        return loss, grads
+
+    if bspecs is None:
+        bt = batch_axes(plan)
+        bspecs = {"tokens": P(bt, None), "labels": P(bt, None)}
+
+    sharded = _shard_map(per_shard, mesh, in_specs=(pspecs, bspecs),
+                         out_specs=(P(), pspecs))
+
+    def train_step(state, batch):
+        loss, grads = sharded(state["params"], batch)
+        new_p, new_opt, stats = adamw_update(state["params"], grads,
+                                             state["opt"], opt_cfg)
+        stats["loss"] = loss
+        return {"params": new_p, "opt": new_opt}, stats
+
+    return train_step, {"params": pspecs, "batch": bspecs}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: optimizer state sharded over the data axis
+# ---------------------------------------------------------------------------
+#
+# The standard path replicates AdamW m/v (f32) across the data axis — 8x the
+# bf16 param bytes per device (61.5 GB for mistral-large-123b at tp=16:
+# untrainable on 16 GB HBM; see EXPERIMENTS §Perf H2).  ZeRO-1 instead:
+#   1. reduce-scatters gradients over 'data' (flat, per leaf) — each data
+#      shard owns 1/ndp of every gradient (wire: P(n-1)/n, HALF the psum),
+#   2. updates its m/v/param chunk locally (f32 state: bytes / ndp),
+#   3. all-gathers the updated bf16 params (wire: P(n-1)/n).
+# Total wire == the old grad psum; optimizer memory and update bandwidth
+# drop by ndp.  Cross-pod reduction of the (already 1/ndp) chunks keeps the
+# paper's hierarchical structure.
+
+def _z1_chunk(leaf_size: int, n: int) -> int:
+    return (leaf_size + n - 1) // n
+
+
+def _is_tp_leaf(spec) -> bool:
+    return len(spec) > 0 and spec[0] == "model" or         (len(spec) > 1 and spec[1] == "model")
+
+
+def abstract_train_state_zero1(cfg, plan, mesh):
+    params = model.abstract_params(cfg, plan)
+    pspecs = model.param_pspecs(cfg, plan)
+    sizes = mesh_axis_sizes(mesh)
+    nd = sizes.get("data", 1)
+
+    def shard_leaf(p, spec):
+        local = int(np.prod(p.shape))
+        if _is_tp_leaf(spec):
+            # local leaf excludes the tp axis
+            local //= plan.tp
+            shape = (plan.tp, nd, _z1_chunk(local, nd))
+        else:
+            shape = (nd, _z1_chunk(local, nd))
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    flat = jax.tree_util.tree_map(
+        shard_leaf, params, pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return {"params": params,
+            "opt": {"m": flat, "v": flat,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def train_state_pspecs_zero1(cfg, plan):
+    pspecs = model.param_pspecs(cfg, plan)
+
+    def spec_leaf(spec):
+        if _is_tp_leaf(spec):
+            return P("model", "data", None)
+        return P("data", None)
+
+    flat = jax.tree_util.tree_map(spec_leaf, pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    return {"params": pspecs,
+            "opt": {"m": flat, "v": flat, "step": P()}}
+
+
+def init_train_state_zero1(cfg, plan, mesh, seed=0):
+    """Concrete ZeRO-1 state (small/reduced configs; big models restore)."""
+    params = model.init_params(cfg, plan, seed)
+    sizes = mesh_axis_sizes(mesh)
+    nd = sizes.get("data", 1)
+    pspecs = model.param_pspecs(cfg, plan)
+
+    def zeros_leaf(p, spec):
+        local = int(np.prod(p.shape))
+        if _is_tp_leaf(spec):
+            local //= plan.tp
+            return jnp.zeros((plan.tp, nd, _z1_chunk(local, nd)), jnp.float32)
+        return jnp.zeros((nd, _z1_chunk(local, nd)), jnp.float32)
+
+    flat = jax.tree_util.tree_map(
+        zeros_leaf, params, pspecs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P))
+    return {"params": params,
+            "opt": {"m": flat, "v": flat, "step": jnp.zeros((), jnp.int32)}}
+
+
+def make_train_step_zero1(cfg, plan, mesh,
+                          opt_cfg: Optional[AdamWConfig] = None,
+                          shape: Optional[ShapeConfig] = None,
+                          grad_accum: int = 1):
+    """ZeRO-1 train step: the whole update runs inside shard_map."""
+    from repro.optim import adamw_leaf
+    prepare_ledger(mesh)
+    lay = model_layout(cfg, plan)
+    pspecs = model.param_pspecs(cfg, plan)
+    ospecs = train_state_pspecs_zero1(cfg, plan)
+    opt_cfg = opt_cfg or AdamWConfig()
+    sizes = mesh_axis_sizes(mesh)
+    nd = sizes.get("data", 1)
+    ndp = 1
+    for a in plan.grad_axes:
+        ndp *= sizes.get(a, 1)
+    outer = ("pod",) if "pod" in mesh.axis_names else ()
+    _, bspecs = train_batch_template(cfg, shape, plan) if shape else (None, None)
+    if bspecs is None:
+        bt = batch_axes(plan)
+        bspecs = {"tokens": P(bt, None), "labels": P(bt, None)}
+    flat_pspecs = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+
+    def per_shard(params, opt, batch):
+        def loss_fn(p, mb):
+            return model.forward_train(p, mb, cfg, plan, lay)
+
+        if grad_accum > 1:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                l_a, g_a = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (l_a + l / grad_accum,
+                        jax.tree_util.tree_map(
+                            lambda a, b: a + b / grad_accum, g_a, g)), None
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            with cc.LEDGER.scaled(grad_accum):
+                (loss, grads), _ = jax.lax.scan(
+                    acc_step, (jnp.zeros((), jnp.float32), zeros), micro)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch))(params)
+        loss = cc.psum(loss, plan.grad_axes, "dp/loss") / ndp
+
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_p = jax.tree_util.tree_leaves(params)
+        flat_m = jax.tree_util.tree_leaves(opt["m"])
+        flat_v = jax.tree_util.tree_leaves(opt["v"])
+
+        # 1) reduce-scatter grads over 'data' (+ cross-pod psum of chunks)
+        g_chunks, p_chunks, tp_mask = [], [], []
+        for g, p, spec in zip(flat_g, flat_p, flat_pspecs):
+            flat = g.reshape(-1).astype(jnp.float32)
+            chunk = _z1_chunk(flat.shape[0], nd)
+            pad = chunk * nd - flat.shape[0]
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            gs = cc.psum_scatter(flat, "data", "dp/z1_rs") if nd > 1 else flat
+            if outer:
+                gs = cc.psum(gs, outer, "dp/z1_xpod")
+            g_chunks.append(gs / ndp)
+            pf = p.reshape(-1).astype(jnp.float32)
+            if pad:
+                pf = jnp.pad(pf, (0, pad))
+            if nd > 1:
+                me = jax.lax.axis_index("data")
+                pf = jax.lax.dynamic_slice_in_dim(pf, me * chunk, chunk)
+            p_chunks.append(pf)
+            tp_mask.append(_is_tp_leaf(spec))
+
+        # 2) global grad norm (tp-sharded leaves differ across 'model';
+        #    replicated leaves are identical there -> reduce separately)
+        sq_tp = sum(jnp.sum(jnp.square(g)) for g, t in
+                    zip(g_chunks, tp_mask) if t) + 0.0
+        sq_rep = sum(jnp.sum(jnp.square(g)) for g, t in
+                     zip(g_chunks, tp_mask) if not t) + 0.0
+        sq_tp = cc.psum(sq_tp, ("data",) + tuple(plan.tp_axes) + outer,
+                        "dp/z1_norm")
+        sq_rep = cc.psum(sq_rep, ("data",) + outer, "dp/z1_norm")
+        gnorm = jnp.sqrt(sq_tp + sq_rep)
+        step = opt["step"] + 1
+        scale = jnp.minimum(1.0, opt_cfg.clip_norm / (gnorm + 1e-9))
+        lr = opt_cfg.lr * (opt_cfg.schedule(step) if opt_cfg.schedule
+                           else 1.0)
+
+        # 3) local chunk updates + 4) all-gather new params
+        new_p_leaves, new_m, new_v = [], [], []
+        for p, pc, gc, m, v in zip(flat_p, p_chunks, g_chunks,
+                                   flat_m, flat_v):
+            np_, m2, v2 = adamw_leaf(pc, gc, m, v, step, scale, lr, opt_cfg)
+            new_m.append(m2.reshape(m.shape))
+            new_v.append(v2.reshape(v.shape))
+            np_ = np_.reshape(-1).astype(p.dtype)   # bf16 on the wire
+            full = cc.all_gather(np_, "data", "dp/z1_ag") if nd > 1 else np_
+            new_p_leaves.append(full.reshape(-1)[: p.size].reshape(p.shape))
+
+        tdef = jax.tree_util.tree_structure(params)
+        new_params = jax.tree_util.tree_unflatten(tdef, new_p_leaves)
+        new_opt = {"m": jax.tree_util.tree_unflatten(tdef, new_m),
+                   "v": jax.tree_util.tree_unflatten(tdef, new_v),
+                   "step": step}
+        return loss, gnorm, new_params, new_opt
+
+    # strip the leading (tp, nd) layout dims from opt specs for shard_map:
+    # inside, each device sees its chunk directly
+    sharded = _shard_map(
+        per_shard, mesh,
+        in_specs=(pspecs, ospecs["opt"], bspecs),
+        out_specs=(P(), P(), pspecs, ospecs["opt"]))
+
+    def train_step(state, batch):
+        loss, gnorm, new_p, new_opt = sharded(state["params"], state["opt"],
+                                              batch)
+        return {"params": new_p, "opt": new_opt},             {"loss": loss, "grad_norm": gnorm}
+
+    return train_step, {"params": pspecs, "batch": bspecs,
+                        "opt": ospecs["opt"]}
+
+
+def init_train_state(cfg, plan, seed=0):
+    params = model.init_params(cfg, plan, seed)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def abstract_train_state(cfg, plan):
+    params = model.abstract_params(cfg, plan)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"params": params,
+            "opt": {"m": jax.tree_util.tree_map(f32, params),
+                    "v": jax.tree_util.tree_map(f32, params),
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def train_state_pspecs(cfg, plan):
+    pspecs = model.param_pspecs(cfg, plan)
+    return {"params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs, "step": P()}}
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def serve_templates(cfg, plan, shape: ShapeConfig, mesh):
+    """Abstract inputs + specs for prefill/decode lowering of one cell."""
+    prepare_ledger(mesh)
+    lay = model_layout(cfg, plan)
+    B, S = shape.global_batch, shape.seq_len
+    batch_ok = (B % n_dp(mesh, plan) == 0) and not plan.seq_shard_kv
+    bt = batch_axes(plan) if batch_ok else None  # replicate tiny batches
+    tmpl = kvcache.cache_template(cfg, plan, lay, B, S,
+                                  batch_sharded=batch_ok)
+    cache = kvcache.abstract_cache(tmpl)
+    cache_specs = kvcache.cache_pspecs(tmpl)
+    t = {
+        "tokens1": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "cache": cache,
+        "prompt": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    cp = tuple(plan.cp_axes) if plan.cp_axes else None
+    s = {
+        "tokens1": P(bt, None),
+        "pos": P(bt),
+        "cache": cache_specs,
+        "prompt": P(bt, cp),
+    }
+    if cfg.is_encdec:
+        t["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        s["frames"] = P(bt, None, None)
+        t["dec_tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        s["dec_tokens"] = P(bt, None)
+    if cfg.frontend == "vision_patches":
+        t["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_embeds, cfg.d_model), jnp.bfloat16)
+        s["image_embeds"] = P(bt, None, None)
+    return t, s
+
+
+def _serve_bt(plan, shape, mesh):
+    batch_ok = (shape.global_batch % n_dp(mesh, plan) == 0) and \
+        not plan.seq_shard_kv
+    return batch_axes(plan) if batch_ok else None
+
+
+def make_decode_step(cfg, plan, mesh, shape: ShapeConfig):
+    prepare_ledger(mesh)
+    lay = model_layout(cfg, plan)
+    pspecs = model.param_pspecs(cfg, plan)
+    t, s = serve_templates(cfg, plan, shape, mesh)
+    bt = _serve_bt(plan, shape, mesh)
+
+    def per_shard(params, cache, tokens, pos):
+        return model.forward_decode(params, cache, tokens, pos, cfg, plan, lay)
+
+    fn = _shard_map(per_shard, mesh,
+                    in_specs=(pspecs, s["cache"], s["tokens1"], s["pos"]),
+                    out_specs=(P(bt, "model"), s["cache"]))
+    return fn, t, s
+
+
+def make_prefill_step(cfg, plan, mesh, shape: ShapeConfig):
+    prepare_ledger(mesh)
+    lay = model_layout(cfg, plan)
+    pspecs = model.param_pspecs(cfg, plan)
+    t, s = serve_templates(cfg, plan, shape, mesh)
+    bt = _serve_bt(plan, shape, mesh)
+
+    if cfg.is_encdec:
+        def per_shard(params, frames, dec_tokens, cache):
+            return model.forward_prefill(params, frames, cache, cfg, plan,
+                                         lay, extra={"dec_tokens": dec_tokens})
+        fn = _shard_map(per_shard, mesh,
+                        in_specs=(pspecs, s["frames"], s["dec_tokens"],
+                                  s["cache"]),
+                        out_specs=(P(bt, "model"), s["cache"]))
+    elif cfg.frontend == "vision_patches":
+        def per_shard(params, prompt, image_embeds, cache):
+            return model.forward_prefill(params, prompt, cache, cfg, plan,
+                                         lay, extra={"image_embeds": image_embeds})
+        fn = _shard_map(per_shard, mesh,
+                        in_specs=(pspecs, s["prompt"], s["image_embeds"],
+                                  s["cache"]),
+                        out_specs=(P(bt, "model"), s["cache"]))
+    else:
+        def per_shard(params, prompt, cache):
+            return model.forward_prefill(params, prompt, cache, cfg, plan, lay)
+        fn = _shard_map(per_shard, mesh,
+                        in_specs=(pspecs, s["prompt"], s["cache"]),
+                        out_specs=(P(bt, "model"), s["cache"]))
+    return fn, t, s
+
+
+def zero_cache_for(cfg, plan, mesh, batch, budget):
+    lay = model_layout(cfg, plan)
+    tmpl = kvcache.cache_template(cfg, plan, lay, batch, budget)
+    return kvcache.zero_cache(tmpl)

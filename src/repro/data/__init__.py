@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, PackedBatches, Prefetcher, \
+    SyntheticCorpus, make_pipeline  # noqa: F401

@@ -1,0 +1,90 @@
+"""Flash-decode kernel — the paper's autoregressive (GEMV) hot spot on TPU.
+
+One new token attends to a long KV cache: arithmetic intensity ~1 FLOP/byte,
+purely HBM-bandwidth-bound (the TPU analog of the paper's L3-bound GEMV
+regime).  The kernel streams K/V through VMEM in (bkv, D) tiles on the
+sequential grid axis with online-softmax scratch carries, touching each
+cache byte exactly once; batch*heads ride the parallel grid axes.  Length
+masking handles ragged prefixes (continuous batching).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale, bkv, n_kv):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+
+    @pl.when(ki * bkv < length)
+    def _compute():
+        s = jax.lax.dot_general(
+            q_ref[0, 0][None], k_ref[0, 0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (1, bkv)
+        kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        mask = kpos < length
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bkv", "interpret"))
+def decode_attention(q, k, v, length, *, scale=None, bkv=512,
+                     interpret=False):
+    """q: (B, H, D); k/v: (B, H, S, D); length: (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    bkv = min(bkv, S)
+    pkv = (-S) % bkv
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    n_kv = (S + pkv) // bkv
+    grid = (B, H, n_kv)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bkv=bkv, n_kv=n_kv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, D), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((), jnp.float32),
+            pltpu.VMEM((), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)

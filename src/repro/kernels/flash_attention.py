@@ -1,0 +1,112 @@
+"""Flash attention kernel (prefill/prompt mode) with causal grid pruning.
+
+HW-codesign notes: the kv axis is the innermost sequential grid dimension;
+running (m, l, acc) live in VMEM scratch across kv steps, so the S x S score
+matrix never exists in HBM.  ``pl.when`` predicates skip fully-masked
+(kv > q) tiles — on TPU this eliminates the 2x upper-triangle overhead the
+pure-JAX scan path pays (see attention.py), which is exactly the win the
+roofline §Perf log attributes to this kernel.  Sliding windows additionally
+skip tiles left of the window — linear cost for SWA layers (gemma3/mixtral/
+hymba local layers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, window, bq, bkv, n_kv, seq_q, seq_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
+        + (seq_kv - seq_q)
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    # tile-level pruning: skip tiles strictly above the diagonal / left of
+    # the window.
+    q_hi = qi * bq + bq - 1 + (seq_kv - seq_q)
+    q_lo = qi * bq + (seq_kv - seq_q)
+    run = True
+    if causal:
+        run = ki * bkv <= q_hi
+    if window > 0:
+        run = jnp.logical_and(run, (ki + 1) * bkv - 1 > q_lo - window)
+
+    @pl.when(run)
+    def _compute():
+        s = jax.lax.dot_general(
+            q_ref[0], k_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        mask = k_pos < seq_kv
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None]) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bkv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    bq=256, bkv=256, interpret=False):
+    """q: (H, Sq, D); k/v: (H, Skv, D).  q positions align to the kv suffix."""
+    H, Sq, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    bq, bkv = min(bq, Sq), min(bkv, Skv)
+    pq, pkv = (-Sq) % bq, (-Skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0)))
+    n_kv = (Skv + pkv) // bkv
+    grid = (H, (Sq + pq) // bq, n_kv)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bkv=bkv, n_kv=n_kv,
+                          seq_q=Sq, seq_kv=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

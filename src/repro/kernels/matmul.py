@@ -1,0 +1,56 @@
+"""Tiled MXU matmul kernel — the GEMM core of the paper's prompt mode.
+
+HW-codesign notes (TPU v5e): MXU is a 128x128 systolic array; block shapes
+are multiples of 128 so tiles map 1:1 onto MXU passes.  The K dimension is
+the innermost (sequential) grid axis: partial products accumulate into a
+float32 VMEM scratch tile, written back once per (m, n) tile — HBM traffic
+is minimal (each A/B tile read once, C written once), the TPU analog of the
+paper's "weights stationary in on-chip memory" discipline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul(a, b, *, bm=256, bk=512, bn=256, interpret=False):
+    """a: (M, K) @ b: (K, N) -> (M, N).  Dims must divide block shapes."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (M, K, N, bm, bk, bn)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` is the mathematical definition with no tiling/blocking —
+tests sweep shapes/dtypes and assert the Pallas kernels (interpret=True on
+CPU) match these within dtype-appropriate tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def ref_rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) *
+            (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def ref_flash_attention(q, k, v, causal=True, window=0, scale=None):
+    """q: (H, Sq, D), k/v: (H, Skv, D) -> (H, Sq, D)."""
+    H, Sq, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (q suffix of kv)
+    kp = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_decode_attention(q, k, v, length, scale=None):
+    """q: (B, H, D); k/v: (B, H, S, D); length: (B,) valid prefix lengths."""
+    B, H, D = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, :] < length[:, None]
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_ssd_scan(x, dt, B, C, A, state0=None):
+    """Sequential SSD reference.  x: (S, H, P), dt: (S, H), B/C: (S, N),
+    A: (H,) negative.  Returns (y (S,H,P), final_state (H,P,N))."""
+    S, H, P = x.shape
+    N = B.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dec = jnp.exp(dtt * A)[:, None, None]            # (H,1,1)
+        h = h * dec + (dtt[:, None] * xt)[:, :, None] * bt[None, None, :]
+        y = jnp.einsum("n,hpn->hp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((H, P, N), jnp.float32) if state0 is None else state0
+    hT, ys = jax.lax.scan(step, h0, (xf, dtf, Bf, Cf))
+    return ys.astype(x.dtype), hT

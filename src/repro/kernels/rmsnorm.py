@@ -1,0 +1,43 @@
+"""Fused RMSNorm kernel — one HBM read + one write per row.
+
+Unfused, RMSNorm is 3 passes (square-reduce, rsqrt-scale, multiply); fusing
+keeps the row resident in VMEM: memory traffic drops 3x on a purely
+bandwidth-bound op.  Rows are tiled (bs, E): E stays whole per tile (the
+reduction axis must be local), bs rows amortize grid overhead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) *
+                  (1.0 + s_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "eps", "interpret"))
+def rmsnorm(x, scale, *, bs=256, eps=1e-6, interpret=False):
+    """x: (T, E); scale: (E,) -> (T, E)."""
+    T, E = x.shape
+    bs = min(bs, T)
+    pad = (-T) % bs
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((T + pad) // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, E), lambda i: (i, 0)),
+            pl.BlockSpec((E,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs, E), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T + pad, E), x.dtype),
+        interpret=interpret,
+    )(x, scale)
+    return out[:T]

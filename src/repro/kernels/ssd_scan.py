@@ -1,0 +1,88 @@
+"""Chunked SSD scan kernel (mamba2) — state carried across a sequential grid.
+
+HW-codesign notes: TPU grid dimensions execute sequentially, so the running
+SSM state (H, P, N) lives in a float32 VMEM scratch that persists across
+chunk steps — the recurrence never round-trips HBM.  Each grid step loads
+one (Q, ...) chunk of x/dt/B/C, computes the intra-chunk quadratic term on
+the MXU and the inter-chunk term from the carried state, then updates the
+state.  This is the TPU adaptation of the paper's "weights/state stationary
+on-chip" principle applied to SSD: HBM traffic is exactly one read of the
+inputs + one write of y per token.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, st_ref, *,
+                nc: int):
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (Q, H, P)
+    dt = dt_ref[...].astype(jnp.float32)        # (Q, H)
+    B = b_ref[...].astype(jnp.float32)          # (Q, N)
+    C = c_ref[...].astype(jnp.float32)          # (Q, N)
+    A = a_ref[...].astype(jnp.float32)          # (H,)
+    Q = x.shape[0]
+
+    a = dt * A[None, :]                          # (Q, H)
+    cs = jnp.cumsum(a, axis=0)
+    cs_last = cs[-1]                             # (H,)
+
+    # intra-chunk (quadratic) term
+    G = jnp.dot(C, B.T, preferred_element_type=jnp.float32)   # (Q, Q)
+    seg = cs[:, None, :] - cs[None, :, :]                     # (Q, Q, H)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where((ii >= jj)[:, :, None], jnp.exp(seg), 0.0)
+    W = G[:, :, None] * L                                     # (Q, Q, H)
+    xdt = x * dt[:, :, None]                                  # (Q, H, P)
+    y = jnp.einsum("ijh,jhp->ihp", W, xdt)
+
+    # inter-chunk term from the carried state
+    S_prev = st_ref[...]                                      # (H, P, N)
+    y += jnp.einsum("jn,hpn->jhp", C, S_prev) * jnp.exp(cs)[:, :, None]
+
+    # state update
+    decay_to_end = jnp.exp(cs_last[None, :] - cs)             # (Q, H)
+    contrib = jnp.einsum("jh,jn,jhp->hpn", decay_to_end * dt, B, x)
+    st_ref[...] = S_prev * jnp.exp(cs_last)[:, None, None] + contrib
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, B, C, A, *, chunk=128, interpret=False):
+    """x: (S, H, P); dt: (S, H); B/C: (S, N); A: (H,) -> y (S, H, P).
+
+    (The D*x skip term and gating are applied by the caller; S % chunk == 0
+    is required — pad upstream.)
+    """
+    S, H, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc),
+        grid=(nc,),
+        in_specs=[
+            pl.BlockSpec((chunk, H, P), lambda c: (c, 0, 0)),
+            pl.BlockSpec((chunk, H), lambda c: (c, 0)),
+            pl.BlockSpec((chunk, N), lambda c: (c, 0)),
+            pl.BlockSpec((chunk, N), lambda c: (c, 0)),
+            pl.BlockSpec((H,), lambda c: (0,)),
+        ],
+        out_specs=pl.BlockSpec((chunk, H, P), lambda c: (c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A)

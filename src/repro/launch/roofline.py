@@ -1,0 +1,124 @@
+"""Three-term roofline model for TPU v5e (per arch x shape x mesh).
+
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory  = hbm_bytes_per_device / HBM_BW
+    t_coll    = wire_bytes_per_device / ICI_BW
+
+Sources (see DESIGN.md §5 and EXPERIMENTS.md §Roofline):
+* FLOPs / HBM bytes — the analytic model (``core.analytics``), validated
+  against ``compiled.cost_analysis()`` on unrolled modules (cost_analysis
+  counts scanned loop bodies ONCE, so it cannot be used directly on deep
+  scanned stacks).
+* collective wire bytes — the CommLedger (exact trace-time audit with scan
+  multipliers; ring-cost wire model), cross-checked against collective ops
+  present in the lowered HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+
+import numpy as np
+
+# TPU v5e-class constants (from the assignment spec)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_dev: float
+    hbm_bytes_dev: float
+    wire_bytes_dev: float
+    model_flops_global: float
+    n_chips: int
+    flops_breakdown: dict
+    bytes_breakdown: dict
+    comm_by_tag: dict
+
+    @property
+    def t_compute(self):
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes_dev / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.wire_bytes_dev / ICI_BW
+
+    @property
+    def bound(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self):
+        """MODEL_FLOPS / compiled FLOPs — fraction of compute that is 'useful'."""
+        return self.model_flops_global / max(self.flops_dev * self.n_chips, 1)
+
+    @property
+    def roofline_fraction(self):
+        """Achievable fraction of the compute roofline if the dominant term
+        were perfectly overlapped with compute: t_compute / t_bound."""
+        return self.t_compute / max(self.t_bound, 1e-30)
+
+    @property
+    def mfu_upper_bound(self):
+        """Model-FLOPs utilization upper bound implied by the roofline:
+        (MODEL_FLOPS / chips / PEAK) / t_bound."""
+        per_chip = self.model_flops_global / self.n_chips / PEAK_FLOPS
+        return per_chip / max(self.t_bound, 1e-30)
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bound=self.bound,
+                 useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction,
+                 mfu_upper_bound=self.mfu_upper_bound)
+        return d
+
+
+def build_roofline(arch, shape_name, mesh_name, cost, ledger_bytes,
+                   comm_by_tag, model_flops, n_chips) -> Roofline:
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name,
+        flops_dev=cost.total_flops,
+        hbm_bytes_dev=cost.total_bytes,
+        wire_bytes_dev=ledger_bytes,
+        model_flops_global=model_flops,
+        n_chips=n_chips,
+        flops_breakdown={k: float(v) for k, v in cost.flops.items()},
+        bytes_breakdown={k: float(v) for k, v in cost.bytes_hbm.items()},
+        comm_by_tag={k: float(v) for k, v in comm_by_tag.items()},
+    )
+
+
+def fmt_seconds(t):
+    if t >= 1:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.2f}ms"
+    return f"{t*1e6:.1f}us"
+
+
+def summarize(r: Roofline) -> str:
+    return (f"{r.arch:22s} {r.shape:12s} {r.mesh:9s} "
+            f"comp={fmt_seconds(r.t_compute):>9s} "
+            f"mem={fmt_seconds(r.t_memory):>9s} "
+            f"coll={fmt_seconds(r.t_collective):>9s} "
+            f"bound={r.bound:10s} useful={r.useful_ratio:5.2f} "
+            f"roofline_frac={r.roofline_fraction:5.2f} "
+            f"mfu_ub={r.mfu_upper_bound:5.2f}")

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, adamw_leaf, adamw_update, \
+    cosine_schedule, global_norm, init_opt_state  # noqa: F401

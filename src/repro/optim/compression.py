@@ -1,0 +1,88 @@
+"""Gradient compression for the cross-pod (slow-link) reduction hop.
+
+int8 block-quantized all-reduce with error feedback: the quantization
+residual is carried into the next step, so compression introduces no
+asymptotic bias (Seide et al. / EF-SGD).  Applied ONLY to the outer
+(cross-pod) hop of the hierarchical reduction — the in-pod ICI hop stays
+full precision, mirroring the paper's "cheap local / expensive global"
+traffic split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import collectives as cc
+
+BLOCK = 256
+
+
+def _quantize(x):
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), pad
+
+
+def _dequantize(q, scale, pad, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def _common_scale(x, axes, tag):
+    """Per-block scale agreed across the axis (tiny pmax, exact)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    local = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = cc.psum_max(local, axes, tag + "/scale") / 127.0 + 1e-12
+    return blocks, scale, pad
+
+
+def compressed_psum(x, axes, tag: str):
+    """Common-scale int8 all-reduce: pmax scales (tiny) -> quantize with the
+    SHARED scale -> sum int32 -> dequantize.  Exact up to quantization; wire
+    bytes ~1/4 of bf16 (int8 payload dominates, int32 on-wire modeled
+    conservatively by the ledger via the int32 dtype)."""
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    blocks, scale, pad = _common_scale(x, axes, tag)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    qs = cc.psum(q.astype(jnp.int32), axes, tag + "/q8")
+    return _dequantize(qs, scale, pad, x.shape)
+
+
+def make_ef_grad_reducer(inner_axes=("data",), outer_axes=("pod",)):
+    """Returns (reduce_fn(grads, error_state) -> (grads, error_state), init).
+
+    In-pod: exact psum_scatter/all_gather.  Cross-pod: int8+EF.
+    """
+    def init(grads):
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def reduce(grads, err):
+        def leaf(g, e):
+            # in-pod first: exact, fast ICI
+            g32 = cc.psum(g.astype(jnp.float32), inner_axes, "dp/inpod") + e
+            blocks, scale, pad = _common_scale(g32, outer_axes, "dp/xpod")
+            q = jnp.clip(jnp.round(blocks / scale), -127, 127)
+            deq_local = _dequantize(q.astype(jnp.int8), scale, pad, g32.shape)
+            new_err = g32 - deq_local                     # error feedback
+            qs = cc.psum(q.astype(jnp.int32), outer_axes, "dp/xpod_q8")
+            return _dequantize(qs, scale, pad, g32.shape).astype(g.dtype), \
+                new_err
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_e = jax.tree_util.tree_leaves(err)
+        out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+        return (jax.tree_util.tree_unflatten(tdef, [o[0] for o in out]),
+                jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]))
+
+    return reduce, init

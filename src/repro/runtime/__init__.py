@@ -1,0 +1,2 @@
+from repro.runtime.ft import FTConfig, Heartbeat, supervise  # noqa: F401
+from repro.runtime.straggler import HedgedRouter  # noqa: F401

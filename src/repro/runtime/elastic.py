@@ -1,0 +1,51 @@
+"""Elastic scaling: rebuild the mesh from the surviving device set and
+reshard the training/serving state onto it.
+
+Contract at fleet scale: when membership changes (node loss, pod added),
+the controller picks the largest (dp', tp') grid the survivors support,
+every worker restores/reshards via ``checkpoint.resharding``, and training
+continues — no manual relayout.  TP changes are exact (canonicalize ->
+re-scatter); DP changes only affect batch placement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.checkpoint.resharding import reshard_params
+from repro.core.partition import ShardingPlan
+from repro.launch.mesh import make_mesh
+
+
+@dataclass
+class ElasticDecision:
+    dp: int
+    tp: int
+    n_devices: int
+
+    @property
+    def plan(self):
+        return ShardingPlan(tp=self.tp)
+
+
+def choose_layout(n_devices: int, cfg, prefer_tp: int = 16) -> ElasticDecision:
+    """Largest usable (dp, tp): tp <= prefer_tp, tp | n_heads-padding works
+    for any tp, so the only hard constraint is tp <= n_devices."""
+    tp = min(prefer_tp, n_devices)
+    while n_devices % tp:
+        tp -= 1
+    return ElasticDecision(dp=n_devices // tp, tp=tp, n_devices=n_devices)
+
+
+def rebuild(cfg, params, plan_from: ShardingPlan, devices=None,
+            prefer_tp: int = 16):
+    """-> (mesh, plan, resharded_params) for the current device set."""
+    devices = devices if devices is not None else jax.devices()
+    dec = choose_layout(len(devices), cfg, prefer_tp)
+    mesh = make_mesh((dec.dp, dec.tp), ("data", "model"),
+                     devices=devices[: dec.dp * dec.tp])
+    plan_to = dec.plan
+    new_params = reshard_params(params, cfg, plan_from, plan_to)
+    return mesh, plan_to, new_params

@@ -1,0 +1,77 @@
+"""Straggler mitigation.
+
+Serving: **hedged execution** — if a replica misses its latency budget,
+re-issue the request on another replica and take the first result (Dean's
+tail-at-scale recipe).  ``HedgedRouter`` implements deadline + hedge with
+pluggable replica backends (tested with synthetic delay distributions; on a
+fleet, backends are per-pod serving endpoints).
+
+Training: synchronous SPMD cannot hedge a step, so mitigation is
+(a) the Heartbeat watchdog (runtime.ft) turning a wedged step into a
+restart-from-checkpoint, and (b) elastic re-layout (runtime.elastic)
+excluding the slow node on restart.  Both are wired into launch/train.py.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class HedgeStats:
+    issued: int = 0
+    hedged: int = 0
+    wins_primary: int = 0
+    wins_hedge: int = 0
+    p50_ms: float = 0.0
+    latencies: list = field(default_factory=list)
+
+
+class HedgedRouter:
+    """Route a request to replica i; hedge to the next replica if the
+    primary hasn't answered within ``hedge_after_s``."""
+
+    def __init__(self, replicas: List[Callable], hedge_after_s: float):
+        self.replicas = replicas
+        self.hedge_after = hedge_after_s
+        self.stats = HedgeStats()
+        self._rr = 0
+
+    def __call__(self, request):
+        t0 = time.monotonic()
+        primary = self.replicas[self._rr % len(self.replicas)]
+        backup = self.replicas[(self._rr + 1) % len(self.replicas)]
+        self._rr += 1
+        self.stats.issued += 1
+
+        result = {}
+        done = threading.Event()
+
+        def run(fn, who):
+            try:
+                r = fn(request)
+            except Exception:      # noqa: BLE001 — failed replica = no answer
+                return
+            if not done.is_set():
+                result[who] = r
+                done.set()
+
+        t1 = threading.Thread(target=run, args=(primary, "primary"),
+                              daemon=True)
+        t1.start()
+        if not done.wait(self.hedge_after):
+            self.stats.hedged += 1
+            t2 = threading.Thread(target=run, args=(backup, "hedge"),
+                                  daemon=True)
+            t2.start()
+            done.wait()
+        if "primary" in result:
+            self.stats.wins_primary += 1
+            out = result["primary"]
+        else:
+            self.stats.wins_hedge += 1
+            out = result["hedge"]
+        self.stats.latencies.append(time.monotonic() - t0)
+        return out

@@ -1,0 +1,2 @@
+from repro.serving.engine import EngineStats, Request, ServingEngine  # noqa: F401
+from repro.serving.sampler import SamplerConfig, sample_from_logits  # noqa: F401

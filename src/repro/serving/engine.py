@@ -1,0 +1,154 @@
+"""Batched serving engine: continuous-batching-lite over prefill/decode steps.
+
+Slot-based scheduler (vLLM-style, sized for the paper's single-user edge
+regime up through pod-scale batches): a fixed decode batch of B slots; new
+requests prefill into a free slot cache lane (production note: bucket prompt
+lengths to bound recompilation; exact-length prefill is used here); every
+engine tick runs ONE
+fused decode step for all active slots (the GEMV-batching the paper's
+autoregressive mode maps to on TPU).  EOS/length-complete slots free up and
+are refilled from the queue.
+
+The engine is mesh-agnostic: it drives whatever (prefill_fn, decode_fn)
+pair ``core.steps`` built — 1-device CPU smoke or a full pod.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import SamplerConfig, sample_from_logits
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclass
+class EngineStats:
+    ticks: int = 0
+    prefills: int = 0
+    decoded_tokens: int = 0
+    ttft_s: list = field(default_factory=list)
+    tpot_s: list = field(default_factory=list)
+
+
+class ServingEngine:
+    def __init__(self, cfg, plan, mesh, batch_slots: int, seq_budget: int,
+                 params, prefill_fn, decode_fn, eos_id: int = 1,
+                 sampler: Optional[SamplerConfig] = None):
+        from repro.core import steps as _steps
+        self.cfg, self.plan, self.mesh = cfg, plan, mesh
+        self.B, self.S = batch_slots, seq_budget
+        self.params = params
+        self.prefill_fn = prefill_fn        # jitted, batch=1 lane
+        self.decode_fn = decode_fn          # jitted, batch=B
+        self.eos = eos_id
+        self.sampler = sampler or SamplerConfig()
+        self.queue: collections.deque = collections.deque()
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.last_token = np.zeros(batch_slots, np.int32)
+        self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
+                                           seq_budget)
+        self.stats = EngineStats()
+        self._rng = np.random.RandomState(0)
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request):
+        req.t_submit = time.monotonic()
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 10_000):
+        while (self.queue or any(self.slots)) and \
+                self.stats.ticks < max_ticks:
+            self.tick()
+        return self.stats
+
+    # ----------------------------------------------------------------- tick
+    def tick(self):
+        self._admit()
+        if not any(self.slots):
+            return
+        with self.mesh:
+            logits, self.cache = self.decode_fn(
+                self.params, self.cache,
+                jnp.asarray(self.last_token[:, None]),
+                jnp.asarray(self.pos))
+        logits = np.asarray(jax.device_get(logits)).astype(np.float32)
+        toks = sample_from_logits(logits, self.sampler,
+                                  self.cfg.vocab_size, self._rng)
+        now = time.monotonic()
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(toks[b])
+            if not req.out_tokens:
+                req.t_first_token = now
+                self.stats.ttft_s.append(now - req.t_submit)
+            req.out_tokens.append(tok)
+            self.pos[b] += 1
+            self.last_token[b] = tok
+            self.stats.decoded_tokens += 1
+            if tok == self.eos or len(req.out_tokens) >= req.max_new_tokens \
+                    or self.pos[b] >= self.S - 1:
+                req.done = True
+                req.t_done = now
+                self.stats.tpot_s.append(
+                    (now - req.t_first_token) /
+                    max(len(req.out_tokens) - 1, 1))
+                self.slots[b] = None
+        self.stats.ticks += 1
+
+    def _admit(self):
+        for b in range(self.B):
+            if self.slots[b] is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_into(b, req)
+                self.slots[b] = req
+
+    def _prefill_into(self, b: int, req: Request):
+        """Prefill a single request and splice its cache into lane b."""
+        from repro.core import steps as _steps
+        S = len(req.prompt)
+        assert S < self.S
+        prompt = np.zeros((1, self.S), np.int32)
+        prompt[0, :S] = req.prompt
+        lane_cache = _steps.zero_cache_for(self.cfg, self.plan, self.mesh, 1,
+                                           self.S)
+        with self.mesh:
+            logits, lane_cache = self.prefill_fn(
+                self.params, jnp.asarray(prompt[:, :S]), lane_cache)
+        self.stats.prefills += 1
+        # splice lane 0 of lane_cache into slot b of the engine cache
+        self.cache = _splice_cache(self.cache, lane_cache, b)
+        logits = np.asarray(jax.device_get(logits)).astype(np.float32)
+        tok = sample_from_logits(logits, self.sampler, self.cfg.vocab_size,
+                                 self._rng)[0]
+        self.pos[b] = S
+        self.last_token[b] = int(tok)
+        req.out_tokens = []
+
+
+def _splice_cache(big, lane, b):
+    def leaf(big_l, lane_l):
+        if big_l.ndim >= 2 and big_l.shape[1] == lane_l.shape[1] and \
+                lane_l.shape[0] == big_l.shape[0]:
+            pass
+        return big_l.at[:, b:b + 1].set(lane_l[:, 0:1]) \
+            if big_l.ndim >= 2 else big_l
+    return jax.tree_util.tree_map(leaf, big, lane)

@@ -1,0 +1,17 @@
+import os
+import sys
+
+# tests run single-device (the dry-run sets its own 512-device flag in a
+# subprocess; multi-device TP tests spawn subprocesses with their own flags)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+AXT = (jax.sharding.AxisType.Auto,)
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=AXT * 2,
+                         devices=jax.devices()[:1])

@@ -1,0 +1,105 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = np.random.RandomState(0)
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 384),
+                                   (512, 256, 128)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_matmul(m, k, n, dt):
+    a = jnp.asarray(RNG.randn(m, k), dt)
+    b = jnp.asarray(RNG.randn(k, n), dt)
+    out = matmul(a, b, bm=128, bk=128, bn=128, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref.ref_matmul(a, b),
+                                                np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("t,e", [(64, 128), (100, 256), (256, 512)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(t, e, dt):
+    x = jnp.asarray(RNG.randn(t, e), dt)
+    s = jnp.asarray(RNG.randn(e) * 0.1, dt)
+    out = rmsnorm(x, s, bs=32, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.ref_rmsnorm(x, s), np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("sq,skv,causal,win", [
+    (256, 256, True, 0), (192, 448, True, 0), (256, 256, True, 64),
+    (128, 128, False, 0), (320, 320, True, 100)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(sq, skv, causal, win, dt):
+    q = jnp.asarray(RNG.randn(2, sq, 64), dt)
+    k = jnp.asarray(RNG.randn(2, skv, 64), dt)
+    v = jnp.asarray(RNG.randn(2, skv, 64), dt)
+    o1 = flash_attention(q, k, v, causal=causal, window=win, bq=64, bkv=64,
+                         interpret=True)
+    o2 = ref.ref_flash_attention(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("s,lens", [(300, (13, 299, 150)),
+                                    (128, (1, 64, 128))])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(s, lens, dt):
+    B = len(lens)
+    q = jnp.asarray(RNG.randn(B, 4, 64), dt)
+    k = jnp.asarray(RNG.randn(B, 4, s, 64), dt)
+    v = jnp.asarray(RNG.randn(B, 4, s, 64), dt)
+    ln = jnp.asarray(lens, jnp.int32)
+    o1 = decode_attention(q, k, v, ln, bkv=64, interpret=True)
+    o2 = ref.ref_decode_attention(q, k, v, ln)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), **_tol(dt))
+
+
+@pytest.mark.parametrize("s,h,p,n,chunk", [(256, 4, 16, 32, 64),
+                                           (128, 2, 32, 16, 32)])
+def test_ssd_scan(s, h, p, n, chunk):
+    x = jnp.asarray(RNG.randn(s, h, p), jnp.float32)
+    dt_ = jnp.asarray(np.abs(RNG.randn(s, h)) * 0.1, jnp.float32)
+    B = jnp.asarray(RNG.randn(s, n), jnp.float32)
+    C = jnp.asarray(RNG.randn(s, n), jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.rand(h)) * 2 + 0.5, jnp.float32)
+    o1 = ssd_scan(x, dt_, B, C, A, chunk=chunk, interpret=True)
+    o2, _ = ref.ref_ssd_scan(x, dt_, B, C, A)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunked_matches_sequential():
+    """core.ssm chunked algorithm == sequential reference (exactness)."""
+    from repro.core.ssm import ssd_chunked
+    S, H, P, N, B = 96, 3, 8, 16, 2
+    x = jnp.asarray(RNG.randn(B, S, H, P), jnp.float32)
+    dt_ = jnp.asarray(np.abs(RNG.randn(B, S, H)) * 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(RNG.randn(B, S, N), jnp.float32)
+    A = -jnp.asarray(np.abs(RNG.rand(H)) + 0.5, jnp.float32)
+    D = jnp.zeros(H)
+    y, st = ssd_chunked(x, dt_, Bm, Cm, A, D, chunk=32)
+    for b in range(B):
+        yr, str_ = ref.ref_ssd_scan(x[b], dt_[b], Bm[b], Cm[b], A)
+        np.testing.assert_allclose(np.asarray(y[b]), np.asarray(yr),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(st[b]), np.asarray(str_),
+                                   rtol=2e-3, atol=2e-3)

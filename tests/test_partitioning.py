@@ -1,0 +1,89 @@
+"""Partitioning correctness: TP-equivalence (subprocess, 8 devices) +
+layout algebra unit tests."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.partition import ShardingPlan, dim_layout, head_layout
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_tp_equivalence_subprocess():
+    """loss/grads/decode logits identical between tp=1 and (data=2,model=4).
+    Runs tests/tp_equiv_main.py under 8 host devices (~10 min on 1 CPU)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tests", "tp_equiv_main.py")],
+                       capture_output=True, text=True, env=env,
+                       timeout=3000)
+    assert "ALL-OK" in r.stdout, r.stdout[-3000:] + r.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# head layout algebra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hq,hkv,tp", [
+    (16, 8, 16), (32, 16, 16), (96, 8, 16), (48, 8, 16), (25, 5, 16),
+    (16, 16, 16), (8, 8, 4), (64, 64, 16), (6, 2, 4), (32, 8, 16),
+])
+def test_head_layout_covers_all_heads(hq, hkv, tp):
+    hl = head_layout(hq, hkv, tp)
+    group = hq // hkv
+    assert hl.hq_pad % tp == 0 and hl.hq_loc * tp == hl.hq_pad
+    # every REAL q head is assigned the correct kv head
+    for i in range(tp):
+        for j in range(hl.hq_loc):
+            h = i * hl.hq_loc + j
+            if h >= hq:
+                continue
+            slot = j // hl.r
+            assert hl.kv_map[i][slot] == h // group, (i, j, h)
+    # every kv head is stored somewhere
+    stored = {k for row in hl.kv_map for k in row}
+    assert stored == set(range(hkv))
+
+
+def test_head_layout_no_dup_when_divisible():
+    hl = head_layout(64, 64, 16)
+    assert hl.kv_duplication == 1.0
+
+
+def test_head_layout_dup_factor_gqa():
+    hl = head_layout(16, 8, 16)     # gemma3-12b: kv replicated 2x
+    assert hl.kv_duplication == 2.0
+
+
+@pytest.mark.parametrize("n,tp", [(3072, 16), (1408, 16), (50280, 16),
+                                  (100, 7)])
+def test_dim_layout(n, tp):
+    dl = dim_layout(n, tp)
+    assert dl.loc * tp == dl.n_pad >= n and dl.n_pad - n < tp
+
+
+def test_duplication_report_dense_zero():
+    from repro.configs import get_config
+    from repro.core.partition import duplication_report
+    rep = duplication_report(get_config("mistral-large-123b"),
+                             ShardingPlan(tp=16))
+    # only deviation for dense GQA archs is the documented kv replication
+    # (mistral-large: kv=8 duplicated 2x across tp=16 => 1.8% of weights)
+    assert rep["dup_fraction"] < 0.02
+    assert rep["pad_fraction"] < 0.01
+
+
+@pytest.mark.slow
+def test_zero1_equivalence_subprocess():
+    """ZeRO-1 optimizer sharding follows the identical loss trajectory."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tests", "zero1_equiv_main.py")],
+                       capture_output=True, text=True, env=env, timeout=1800)
+    assert "ZERO1-OK" in r.stdout, r.stdout[-2000:] + r.stderr[-1500:]

@@ -1,0 +1,78 @@
+"""Regression guard for the EXPERIMENTS.md §Perf claims.
+
+Reads the committed dry-run records under results_perf/ and asserts the
+hillclimb improvements hold (so a regression in sharding, analytics or the
+ledger shows up as a test failure, not silent doc rot)."""
+import json
+import os
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "results_perf")
+
+
+def _load(name):
+    path = os.path.join(ROOT, name + ".txt")
+    if not os.path.exists(path):
+        pytest.skip(f"{name} not present (dry-run artifacts not generated)")
+    lines = [l for l in open(path) if l.startswith("RESULT ")]
+    assert lines, path
+    rec = json.loads(lines[-1][len("RESULT "):])
+    assert rec["status"] == "ok", rec
+    return rec
+
+
+def test_h1_int8_halves_decode_memory_term():
+    base = _load("h1_base")["roofline"]
+    opt = _load("h1_kv8_w8")["roofline"]
+    assert opt["t_memory"] < 0.55 * base["t_memory"]
+    # and sits near the bandwidth floor for int8 weights+KV
+    floor = (7.7e9 + 5.9e9) / 819e9
+    assert opt["t_memory"] < 1.10 * floor
+
+
+def test_h1_int8_fits_closer_to_hbm():
+    base = _load("h1_base")["memory"]["peak_est_bytes_per_device"]
+    opt = _load("h1_kv8_w8")["memory"]["peak_est_bytes_per_device"]
+    assert opt < 0.35 * base
+
+
+def test_h2_selective_remat_cuts_compute():
+    base = _load("h2_base")["roofline"]
+    opt = _load("h2_split_sel")["roofline"]
+    assert opt["t_compute"] < 0.82 * base["t_compute"]
+    assert opt["mfu_upper_bound"] > 0.85
+
+
+def test_h2_grad_accum_contains_memory():
+    sel = _load("h2_split_sel")["memory"]["peak_est_bytes_per_device"]
+    ga = _load("h2_split_sel_ga8")["memory"]["peak_est_bytes_per_device"]
+    assert ga < 0.4 * sel
+
+
+def test_h3_context_parallel_kills_collectives():
+    base = _load("h3_base")["roofline"]
+    cp = _load("h3_cp")["roofline"]
+    cpb = _load("h3_cp_bf16")["roofline"]
+    assert cp["t_collective"] < 0.15 * base["t_collective"]
+    assert cpb["t_collective"] < 0.07 * base["t_collective"]
+    assert cpb["bound"] == "compute"
+    assert cpb["mfu_upper_bound"] > 0.8
+
+
+def test_extra_moe_ep_halves_memory_term():
+    ep = _load("x_deepseek_ep")["roofline"]
+    assert ep["mfu_upper_bound"] > 0.45
+
+
+def test_block_sync_contract_in_perf_records():
+    """Even optimized variants keep the audited per-block sync structure."""
+    rec = _load("h1_kv8_w8")
+    # mistral-large: 88 layers x 2 syncs
+    assert rec["block_syncs_per_step"] == 176
+
+
+def test_zero1_cuts_peak_memory():
+    ga = _load("h2_split_sel_ga8")["memory"]["peak_est_bytes_per_device"]
+    z1 = _load("h2_final_z1")["memory"]["peak_est_bytes_per_device"]
+    assert z1 < 0.85 * ga

@@ -1,0 +1,76 @@
+"""Sampler tests + extra hypothesis properties (attention, analytics)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.sampler import SamplerConfig, merged_topk_sample, \
+    sample_from_logits
+
+
+def test_greedy_ignores_vocab_padding():
+    rng = np.random.RandomState(0)
+    logits = np.full((2, 10), -1.0, np.float32)
+    logits[:, 8:] = 5.0              # padded slots have junk-high logits
+    out = sample_from_logits(logits, SamplerConfig(), vocab_size=8, rng=rng)
+    assert (out < 8).all()
+
+
+def test_topk_sampling_support():
+    rng = np.random.RandomState(0)
+    logits = np.zeros((1, 16), np.float32)
+    logits[0, 3], logits[0, 7] = 10.0, 9.0
+    cfg = SamplerConfig(temperature=1.0, top_k=2)
+    draws = {int(sample_from_logits(logits, cfg, 16, rng)[0])
+             for _ in range(50)}
+    assert draws <= {3, 7}
+
+
+def test_merged_topk_greedy_exact():
+    rng = np.random.RandomState(0)
+    full = rng.randn(64).astype(np.float64)
+    # simulate 4 shards each contributing their local top-4
+    vals, ids = [], []
+    for s in range(4):
+        sl = full[s * 16:(s + 1) * 16]
+        top = np.argsort(-sl)[:4]
+        vals += list(sl[top])
+        ids += list(top + s * 16)
+    got = merged_topk_sample((np.array(vals), np.array(ids)),
+                             SamplerConfig(), 64, rng)
+    assert got == int(np.argmax(full))
+
+
+@given(st.integers(8, 64), st.integers(8, 64), st.integers(0, 3))
+@settings(max_examples=15, deadline=None)
+def test_flash_attention_property(sq, skv, seed):
+    """Chunked flash == dense softmax attention for random shapes."""
+    from repro.core.attention import flash_attention
+    from repro.kernels import ref
+    skv = max(skv, sq)               # suffix alignment requires skv >= sq
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(1, 1, 1, sq, 8), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 1, skv, 8), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 1, skv, 8), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_block=16, kv_block=16,
+                          kv_offset=0, q_offset=skv - sq)
+    expect = ref.ref_flash_attention(q[0, 0], k[0], v[0], causal=True)
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.sampled_from(["qwen3-0.6b", "mamba2-370m", "mixtral-8x22b"]),
+       st.sampled_from(["train_4k", "prefill_32k", "decode_32k"]))
+@settings(max_examples=12, deadline=None)
+def test_step_cost_positive_and_scales(arch, shape_name):
+    """Analytic cost is positive and decode <= prefill <= train per device."""
+    from repro.configs import SHAPES, get_config
+    from repro.core import analytics
+    from repro.core.partition import ShardingPlan
+    cfg = get_config(arch)
+    plan = ShardingPlan(tp=16, remat="block")
+    sizes = {"data": 16, "model": 16}
+    c = analytics.step_cost(cfg, plan, SHAPES[shape_name], sizes)
+    assert c.total_flops > 0 and c.total_bytes > 0
+    if shape_name == "train_4k":
+        cp = analytics.step_cost(cfg, plan, SHAPES["decode_32k"], sizes)
+        assert c.total_flops > cp.total_flops
