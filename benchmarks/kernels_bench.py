@@ -7,6 +7,8 @@ the v5e constants.)
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -15,6 +17,16 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+# --smoke swaps in tiny shapes: same code path, CI-friendly wall time, and a
+# BENCH_*.json artifact so the perf trajectory records from day one.
+SIZES = {
+    "full": {"decode_S": (4096, 32768), "flash_S": (1024, 4096),
+             "matmul": ((512, 512, 2048), (2048, 2048, 2048)),
+             "ssd_S": 2048},
+    "smoke": {"decode_S": (512,), "flash_S": (256,),
+              "matmul": ((128, 128, 256),), "ssd_S": 256},
+}
 
 
 def _time(f, *args, iters=5):
@@ -26,11 +38,12 @@ def _time(f, *args, iters=5):
     return (time.perf_counter() - t0) / iters
 
 
-def rows():
+def rows(smoke: bool = False):
+    sz = SIZES["smoke" if smoke else "full"]
     out = []
     rng = np.random.RandomState(0)
     # decode attention: the paper's AR GEMV regime
-    for S in (4096, 32768):
+    for S in sz["decode_S"]:
         B, H, D = 4, 8, 128
         q = jnp.asarray(rng.randn(B, H, D), jnp.float32)
         k = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
@@ -46,7 +59,7 @@ def rows():
                                            flops / PEAK_FLOPS) * 1e6,
                     "arithmetic_intensity": flops / bytes_})
     # flash attention prefill tile
-    for S in (1024, 4096):
+    for S in sz["flash_S"]:
         H, D = 4, 128
         q = jnp.asarray(rng.randn(H, S, D), jnp.float32)
         k = jnp.asarray(rng.randn(H, S, D), jnp.float32)
@@ -61,7 +74,7 @@ def rows():
                                            flops / PEAK_FLOPS) * 1e6,
                     "arithmetic_intensity": flops / bytes_})
     # matmul (prompt-mode GEMM)
-    for M, K, N in ((512, 512, 2048), (2048, 2048, 2048)):
+    for M, K, N in sz["matmul"]:
         a = jnp.asarray(rng.randn(M, K), jnp.float32)
         b = jnp.asarray(rng.randn(K, N), jnp.float32)
         f = jax.jit(ref.ref_matmul)
@@ -74,7 +87,7 @@ def rows():
                                            flops / PEAK_FLOPS) * 1e6,
                     "arithmetic_intensity": flops / bytes_})
     # ssd scan
-    S, H, P, N = 2048, 8, 64, 64
+    S, H, P, N = sz["ssd_S"], 8, 64, 64
     x = jnp.asarray(rng.randn(S, H, P), jnp.float32)
     dt = jnp.asarray(np.abs(rng.randn(S, H)) * 0.05, jnp.float32)
     Bm = jnp.asarray(rng.randn(S, N), jnp.float32)
@@ -92,16 +105,29 @@ def rows():
     return out
 
 
-def main(csv=True):
-    out = rows()
+def main(csv=True, smoke=False, json_path=None):
+    out = rows(smoke=smoke)
     if csv:
         keys = list(out[0])
         print(",".join(keys))
         for r in out:
             print(",".join(f"{r[k]:.4g}" if isinstance(r[k], float)
                            else str(r[k]) for k in keys))
+    if json_path:
+        payload = {"bench": "kernels", "mode": "smoke" if smoke else "full",
+                   "unix_time": time.time(), "jax": jax.__version__,
+                   "rows": out}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
     return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI bench-smoke job)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to a BENCH_*.json artifact")
+    a = ap.parse_args()
+    main(smoke=a.smoke, json_path=a.json)

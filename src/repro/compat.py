@@ -1,0 +1,40 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern JAX API surface (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``), but CI and some dev
+boxes run JAX 0.4.x where shard_map still lives in ``jax.experimental`` (with
+``check_rep``) and ``jax.sharding.AxisType`` does not exist.  Everything that
+builds meshes or shard_maps goes through this module.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Unchecked-replication shard_map on any supported JAX version."""
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def auto_axis_types(n: int):
+    """``axis_types`` tuple for ``jax.make_mesh`` (None if unsupported)."""
+    if _HAS_AXIS_TYPES:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(axis_shapes, axis_names, devices=None):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axt = auto_axis_types(len(axis_names))
+    if axt is not None:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axt,
+                             devices=devices)
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)

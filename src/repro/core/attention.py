@@ -17,12 +17,8 @@ pruning and accounted for explicitly in the roofline analytics).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import collectives as cc
 
@@ -179,3 +175,40 @@ def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=0,
         acc = cc.psum(acc * w[..., None], seq_axes, tag + "/acc")
     out = acc / jnp.maximum(l, 1e-20)[..., None]
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV (block-table indirection over a page pool)
+# ---------------------------------------------------------------------------
+
+def gather_pages(pool, block_table):
+    """Materialize each slot's logical KV stream from the page pool.
+
+    pool: (n_pages, G, psz, D); block_table: (B, n_max) int32 page ids.
+    -> (B, G, n_max * psz, D).  Pure-JAX gather: the Pallas kernel in
+    ``repro.kernels.decode_attention`` streams pages via scalar-prefetched
+    block tables instead of materializing this copy.
+    """
+    n_pages, G, psz, D = pool.shape
+    B, n_max = block_table.shape
+    g = jnp.take(pool, block_table.reshape(-1), axis=0)   # (B*n_max,G,psz,D)
+    g = g.reshape(B, n_max, G, psz, D)
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, G, n_max * psz, D)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, cur_pos, *,
+                           window=0, softcap=0.0, scale=None):
+    """Decode attention reading K/V through a block table.
+
+    q: (B, G, R, D); pools: (n_pages, G, psz, D); block_table: (B, n_max);
+    cur_pos: (B,) absolute position of the current token.  Slot s of the
+    gathered stream holds absolute position s by construction, so validity
+    is simply s <= cur_pos (plus the sliding window).
+    """
+    B = q.shape[0]
+    L = block_table.shape[1] * k_pool.shape[2]
+    kv_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+    return decode_attention(q, gather_pages(k_pool, block_table),
+                            gather_pages(v_pool, block_table), kv_pos,
+                            cur_pos, window=window, softcap=softcap,
+                            scale=scale, tag="attn/paged_decode")

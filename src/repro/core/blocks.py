@@ -14,13 +14,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import ATTN_WINDOW, FFN_MOE, FFN_NONE, MIX_ATTN, \
-    MIX_HYBRID, MIX_SSM
+from repro.configs.base import FFN_MOE, FFN_NONE, MIX_ATTN, MIX_SSM
 from repro.core import collectives as cc
 from repro.core import ssm as ssd
-from repro.core.attention import decode_attention, flash_attention
+from repro.core.attention import decode_attention, flash_attention, \
+    gather_pages, paged_decode_attention
 from repro.core.layers import activation, apply_norm, apply_rope, rmsnorm, \
     rmsnorm_from_sumsq
 from repro.core.moe import moe_ffn_ep, moe_ffn_tp
@@ -115,7 +114,8 @@ def _ungroup(o, lay):
     return o.transpose(0, 3, 1, 2, 4).reshape(B, S, G * R * D)
 
 
-def attn_mixer(xn, pa, cfg, plan, lay, spec, mode, kv_cache, positions, pos):
+def attn_mixer(xn, pa, cfg, plan, lay, spec, mode, kv_cache, positions, pos,
+               pages=None):
     """-> (partial_out (B,S,E), new_kv_cache)."""
     B, S, E = xn.shape
     hl = lay.attn
@@ -128,7 +128,10 @@ def attn_mixer(xn, pa, cfg, plan, lay, spec, mode, kv_cache, positions, pos):
     vg = v.swapaxes(1, 2)
     new_cache = kv_cache
 
-    if mode == "decode":
+    if kv_cache is not None and "kp" in kv_cache:    # paged path
+        out, new_cache = _paged_attn(qg, kg, vg, kv_cache, pages, mode,
+                                     positions, pos, window, cfg)
+    elif mode == "decode":
         new_cache = _kv_write(kv_cache, kg, vg, pos, plan)
         out = decode_attention(
             qg[:, :, :, 0], _kv_dq(new_cache["k"], qg.dtype),
@@ -211,6 +214,49 @@ def _kv_write(kv, kg, vg, pos, plan):
         "k": kv["k"].at[bidx, :, slot].set(_kv_q(kg[:, :, 0], kv["k"].dtype)),
         "v": kv["v"].at[bidx, :, slot].set(_kv_q(vg[:, :, 0], kv["v"].dtype)),
         "pos": kv["pos"].at[bidx, slot].set(pos),
+    }
+
+
+def _paged_attn(qg, kg, vg, kv, pages, mode, positions, pos, window, cfg):
+    """Paged-cache attention (decode token or prefill chunk).
+
+    kv: {"kp","vp"} page pools (n_pages, G, psz, D); pages: {"block_table"}.
+    Token t of a slot lives at page block_table[t // psz], offset t % psz;
+    the gathered stream therefore holds absolute position s at slot s and
+    validity reduces to s <= cur_pos (decode) / causal masking (chunk).
+    Garbage between a prompt's end and its chunk boundary is never read:
+    every later position is decode-written before it first becomes visible.
+    """
+    bt = pages["block_table"]
+    psz = kv["kp"].shape[2]
+    if mode == "decode":
+        new = _page_write(kv, kg, vg, pos[:, None], bt, psz)
+        out = paged_decode_attention(
+            qg[:, :, :, 0], _kv_dq(new["kp"], qg.dtype),
+            _kv_dq(new["vp"], qg.dtype), bt, pos, window=window,
+            scale=cfg.attn_scale)
+        return out[:, :, :, None, :], new
+    # prefill chunk: write the chunk, then attend to the gathered prefix
+    new = _page_write(kv, kg, vg, positions, bt, psz)
+    k_all = gather_pages(_kv_dq(new["kp"], qg.dtype), bt)     # (B,G,L,D)
+    v_all = gather_pages(_kv_dq(new["vp"], qg.dtype), bt)
+    out = flash_attention(qg, k_all, v_all, causal=True, window=window,
+                          scale=cfg.attn_scale, q_offset=positions[0, 0])
+    return out, new
+
+
+def _page_write(kv, kg, vg, positions, bt, psz):
+    """Scatter new K/V into the page pool.  kg/vg: (B, G, C, D);
+    positions: (B, C) absolute token positions (C = 1 for decode)."""
+    B, G, C, D = kg.shape
+    pid = jnp.take_along_axis(bt, positions // psz, axis=1)    # (B, C)
+    off = positions % psz
+    kq = _kv_q(kg, kv["kp"].dtype).transpose(0, 2, 1, 3)       # (B,C,G,D)
+    vq = _kv_q(vg, kv["vp"].dtype).transpose(0, 2, 1, 3)
+    flat_pid, flat_off = pid.reshape(-1), off.reshape(-1)
+    return {
+        "kp": kv["kp"].at[flat_pid, :, flat_off].set(kq.reshape(B * C, G, D)),
+        "vp": kv["vp"].at[flat_pid, :, flat_off].set(vq.reshape(B * C, G, D)),
     }
 
 
@@ -396,7 +442,7 @@ def ffn_sublayer(xn, pf, cfg, plan, spec):
 # ---------------------------------------------------------------------------
 
 def layer_forward(x, p, cache, cfg, plan, lay, spec, mode, positions,
-                  pos=None, enc_memory=None):
+                  pos=None, enc_memory=None, pages=None):
     """One transformer layer.  Returns (x, new_cache)."""
     cache = cache or {}
     new_cache = dict(cache)
@@ -405,7 +451,7 @@ def layer_forward(x, p, cache, cfg, plan, lay, spec, mode, positions,
     h = apply_norm(x, p["ln1"], cfg)
     if spec.mixer == MIX_ATTN:
         partial, nkv = attn_mixer(h, p["attn"], cfg, plan, lay, spec, mode,
-                                  cache.get("kv"), positions, pos)
+                                  cache.get("kv"), positions, pos, pages)
         if nkv is not None:
             new_cache["kv"] = nkv
     elif spec.mixer == MIX_SSM:
@@ -415,7 +461,7 @@ def layer_forward(x, p, cache, cfg, plan, lay, spec, mode, positions,
             new_cache["ssm"] = nssm
     else:  # hybrid: parallel attn + ssm heads, fused before ONE psum
         pa, nkv = attn_mixer(h, p["attn"], cfg, plan, lay, spec, mode,
-                             cache.get("kv"), positions, pos)
+                             cache.get("kv"), positions, pos, pages)
         ps_, nssm = ssm_mixer(h, p["ssm"], cfg, plan, lay, mode,
                               cache.get("ssm"))
         partial = 0.5 * (pa + ps_)

@@ -16,16 +16,12 @@ sequence and attention merges partials via LSE psums (attention.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ATTN_WINDOW, ModelConfig
-from repro.core.partition import ModelLayout, ShardingPlan
 
 
 def kv_window(cfg: ModelConfig, spec, budget: int) -> int:
@@ -127,3 +123,99 @@ def _map_tmpl(tmpl, fn):
         fn, tmpl,
         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
         and isinstance(x[0], tuple))
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (vLLM-style block pool)
+# ---------------------------------------------------------------------------
+#
+# Instead of one exact-length lane per slot, K/V live in a fixed pool of
+# fixed-size pages; each serving slot owns a host-managed list of page ids
+# (its block table).  Token t of a slot lives at page block_table[t // psz],
+# offset t % psz.  This keeps the paper's residency discipline — the pool is
+# one static allocation whose placement never changes — while letting a
+# single compiled decode/prefill-chunk pair serve arbitrary request mixes.
+#
+# Pool layout keeps the contiguous convention with the page pool standing in
+# for the batch dim:   kp / vp : (reps, n_pages, tp * n_kv_loc, psz, D)
+# sharded P(None, None, tpax, None, None): heads follow TP; the pool is
+# replicated over the data axes (block tables address it globally, so
+# paged serving currently targets dp=1 meshes; tp is fully supported).
+#
+# Page 0 is reserved as a scratch page: idle decode lanes point their block
+# tables at it, so the fused decode step can always run full-batch without
+# masking writes.
+
+SCRATCH_PAGE = 0
+
+
+def paged_cache_supported(cfg) -> tuple:
+    """-> (ok, reason).  Paged serving covers attention-only decoders."""
+    if cfg.is_encdec:
+        return False, "enc-dec cross-attention cache is not paged"
+    for spec in cfg.layer_specs():
+        kinds = spec.cache_kinds()
+        if kinds != ["kv"]:
+            return False, f"layer cache kinds {kinds} != ['kv'] (ssm/hybrid)"
+    return True, ""
+
+
+def paged_cache_template(cfg, plan, lay, n_pages: int, page_size: int):
+    """Full paged cache template: list (per layer group) of stacked pools."""
+    ok, why = paged_cache_supported(cfg)
+    if not ok:
+        raise ValueError(f"paged cache unsupported for {cfg.name}: {why}")
+    kvd = jnp.dtype(plan.kv_cache_dtype)
+    d = cfg.head_dim_
+    tpax = "model" if plan.tp > 1 else None
+    pool = ((n_pages, plan.tp * lay.attn.n_kv_loc, page_size, d), kvd,
+            P(None, tpax, None, None))
+    tmpl = []
+    for g in cfg.layer_groups():
+        per_pattern = [_stack_template({"kv": {"kp": pool, "vp": pool}},
+                                       g.n_reps) for _ in g.pattern]
+        tmpl.append(per_pattern)
+    return tmpl
+
+
+def zero_paged_cache(tmpl):
+    return _map_tmpl(tmpl, lambda trip: jnp.zeros(trip[0], trip[1]))
+
+
+class PageAllocator:
+    """Host-side block-pool allocator (page 0 reserved as scratch).
+
+    All-or-nothing allocation: a request either gets every page it needs up
+    front (prompt + max_new_tokens worth) or stays queued — admission control
+    instead of mid-flight OOM.  Freed pages return to the pool LIFO, so a
+    steady-state request mix reuses a small working set."""
+
+    def __init__(self, n_pages: int, n_reserved: int = 1):
+        assert n_pages > n_reserved, (n_pages, n_reserved)
+        self.n_pages = n_pages
+        self.n_reserved = n_reserved
+        self._free = list(range(n_pages - 1, n_reserved - 1, -1))
+        self._free_set = set(self._free)     # O(1) double-free detection
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int):
+        """-> list of n page ids, or None if the pool can't cover n."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
+        return out
+
+    def free(self, pages):
+        for p in pages:
+            assert p >= self.n_reserved, f"freeing reserved page {p}"
+            assert p not in self._free_set, f"double free of page {p}"
+            self._free.append(p)
+            self._free_set.add(p)
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)

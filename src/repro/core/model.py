@@ -20,18 +20,16 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import (ATTN_NONE, FFN_DENSE, FFN_MOE, FFN_NONE,
+from repro.configs.base import (FFN_DENSE, FFN_MOE, FFN_NONE,
                                 MIX_ATTN, MIX_HYBRID, MIX_SSM, ModelConfig)
 from repro.core import collectives as cc
-from repro.core.blocks import _lo, layer_forward, shard_index, tp_index
+from repro.core.blocks import _lo, layer_forward, tp_index
 from repro.core.layers import apply_norm, sharded_embed, sharded_logits, \
     sharded_xent
 from repro.core.partition import ModelLayout, ShardingPlan, dim_layout, \
@@ -426,7 +424,8 @@ def _init_full(spec: ParamSpec, key):
 # ---------------------------------------------------------------------------
 
 def _run_stack(x, stack_params, groups, cfg, plan, lay, mode, positions,
-               pos=None, enc_memory=None, cache=None, causal_specs=None):
+               pos=None, enc_memory=None, cache=None, causal_specs=None,
+               pages=None):
     """Scan every layer group.  cache: list aligned with groups (or None)."""
     new_cache = [] if cache is not None else None
     for gi, (group, gparams) in enumerate(zip(groups, stack_params)):
@@ -438,7 +437,8 @@ def _run_stack(x, stack_params, groups, cfg, plan, lay, mode, positions,
             for pi, spec in enumerate(group.pattern):
                 ci = c_rep[pi] if c_rep is not None else None
                 xc, nc = layer_forward(xc, p_rep[pi], ci, cfg, plan, lay,
-                                       spec, mode, positions, pos, enc_memory)
+                                       spec, mode, positions, pos, enc_memory,
+                                       pages)
                 nc_rep.append(nc if nc is not None else {})
             return xc, (nc_rep if c_rep is not None else None)
 
@@ -559,13 +559,38 @@ def forward_prefill(params, tokens_or_frames, cache0, cfg, plan, lay,
     return logits, cache
 
 
-def forward_decode(params, cache, tokens, pos, cfg, plan, lay):
+def forward_decode(params, cache, tokens, pos, cfg, plan, lay, pages=None):
     """One decode step.  tokens: (B, 1); pos: (B,) -> (logits, cache)."""
     positions = pos[:, None]
     x = embed_tokens(params, tokens, cfg, plan, lay)
     groups = cfg.layer_groups()
     x, cache = _run_stack(x, params["stacks"], groups, cfg, plan, lay,
-                          "decode", positions, pos=pos, cache=cache)
+                          "decode", positions, pos=pos, cache=cache,
+                          pages=pages)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = final_logits(params, x, cfg, lay)[:, 0]
+    return logits, cache
+
+
+def forward_prefill_chunk(params, cache, tokens, chunk_start, last_idx, cfg,
+                          plan, lay, pages):
+    """One fixed-size prefill chunk against the paged cache.
+
+    tokens: (B, C) chunk of the prompt (zero-padded past its end);
+    chunk_start: () absolute position of the chunk's first token;
+    last_idx: () in-chunk index of the prompt's final token (only meaningful
+    on the chunk that contains it — callers use the returned logits then).
+    -> (logits (B, V_loc), cache).  One compiled step serves every prompt
+    length: length variation lives entirely in the (chunk_start, last_idx,
+    block_table) inputs, never in shapes.
+    """
+    B, C = tokens.shape
+    positions = chunk_start + jnp.broadcast_to(jnp.arange(C), (B, C))
+    x = embed_tokens(params, tokens, cfg, plan, lay)
+    groups = cfg.layer_groups()
+    x, cache = _run_stack(x, params["stacks"], groups, cfg, plan, lay,
+                          "prefill", positions, cache=cache, pages=pages)
+    x = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     x = apply_norm(x, params["final_norm"], cfg)
     logits = final_logits(params, x, cfg, lay)[:, 0]
     return logits, cache

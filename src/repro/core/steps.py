@@ -7,8 +7,6 @@ devices) and the 512-device production dry-run.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -44,8 +42,8 @@ def n_dp(mesh, plan):
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    from repro.compat import shard_map
+    return shard_map(f, mesh, in_specs, out_specs)
 
 
 # ---------------------------------------------------------------------------
@@ -472,3 +470,84 @@ def zero_cache_for(cfg, plan, mesh, batch, budget):
     lay = model_layout(cfg, plan)
     tmpl = kvcache.cache_template(cfg, plan, lay, batch, budget)
     return kvcache.zero_cache(tmpl)
+
+
+# ---------------------------------------------------------------------------
+# Paged serving steps (block-table KV + chunked prefill)
+# ---------------------------------------------------------------------------
+#
+# One compiled (decode, prefill-chunk) pair serves every request mix: the
+# decode step is shaped by (batch_slots, n_pages, n_max_pages) and the chunk
+# step by (chunk, n_pages, n_max_pages) — prompt lengths appear only as data
+# (block tables, positions, lengths), never as shapes, so admission never
+# recompiles.  The page pool is replicated over the data axes (block tables
+# address it globally); heads keep the model-axis TP sharding.
+
+def _paged_templates(cfg, plan, mesh, n_pages, page_size):
+    assert not plan.seq_shard_kv, "paged cache is exclusive with seq_shard_kv"
+    prepare_ledger(mesh)
+    lay = model_layout(cfg, plan)
+    tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size)
+    return lay, kvcache.abstract_cache(tmpl), kvcache.cache_pspecs(tmpl)
+
+
+def make_paged_decode_step(cfg, plan, mesh, batch: int, n_pages: int,
+                           page_size: int, n_max_pages: int):
+    """-> (decode_fn(params, cache, tokens (B,1), pos (B,), block_table
+    (B, n_max)) -> (logits, cache), templates, specs)."""
+    lay, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
+                                             page_size)
+    pspecs = model.param_pspecs(cfg, plan)
+
+    def per_shard(params, cache, tokens, pos, block_table):
+        pages = {"block_table": block_table, "page_size": page_size}
+        return model.forward_decode(params, cache, tokens, pos, cfg, plan,
+                                    lay, pages=pages)
+
+    s = {"cache": cache_s, "tokens1": P(None, None), "pos": P(None),
+         "block_table": P(None, None)}
+    t = {"cache": cache_t,
+         "tokens1": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+         "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+         "block_table": jax.ShapeDtypeStruct((batch, n_max_pages),
+                                             jnp.int32)}
+    fn = _shard_map(per_shard, mesh,
+                    in_specs=(pspecs, s["cache"], s["tokens1"], s["pos"],
+                              s["block_table"]),
+                    out_specs=(P(None, "model"), s["cache"]))
+    return fn, t, s
+
+
+def make_prefill_chunk_step(cfg, plan, mesh, chunk: int, n_pages: int,
+                            page_size: int, n_max_pages: int):
+    """-> (chunk_fn(params, cache, tokens (1,C), chunk_start (), last_idx (),
+    block_table (1, n_max)) -> (logits, cache), templates, specs)."""
+    lay, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
+                                             page_size)
+    pspecs = model.param_pspecs(cfg, plan)
+
+    def per_shard(params, cache, tokens, chunk_start, last_idx, block_table):
+        pages = {"block_table": block_table, "page_size": page_size}
+        return model.forward_prefill_chunk(params, cache, tokens,
+                                           chunk_start, last_idx, cfg, plan,
+                                           lay, pages)
+
+    s = {"cache": cache_s, "tokens": P(None, None), "chunk_start": P(),
+         "last_idx": P(), "block_table": P(None, None)}
+    t = {"cache": cache_t,
+         "tokens": jax.ShapeDtypeStruct((1, chunk), jnp.int32),
+         "chunk_start": jax.ShapeDtypeStruct((), jnp.int32),
+         "last_idx": jax.ShapeDtypeStruct((), jnp.int32),
+         "block_table": jax.ShapeDtypeStruct((1, n_max_pages), jnp.int32)}
+    fn = _shard_map(per_shard, mesh,
+                    in_specs=(pspecs, s["cache"], s["tokens"],
+                              s["chunk_start"], s["last_idx"],
+                              s["block_table"]),
+                    out_specs=(P(None, "model"), s["cache"]))
+    return fn, t, s
+
+
+def zero_paged_cache_for(cfg, plan, mesh, n_pages, page_size):
+    lay = model_layout(cfg, plan)
+    tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size)
+    return kvcache.zero_paged_cache(tmpl)

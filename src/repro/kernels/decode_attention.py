@@ -88,3 +88,96 @@ def decode_attention(q, k, v, length, *, scale=None, bkv=512,
         ],
         interpret=interpret,
     )(length, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: K/V pages streamed through a scalar-prefetched block table
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale, psz, n_max):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    @pl.when(ki * psz < length)
+    def _compute():
+        s = jax.lax.dot_general(
+            q_ref[0, 0][None], k_ref[0, 0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (1, psz)
+        kpos = ki * psz + jax.lax.broadcasted_iota(jnp.int32, (1, psz), 1)
+        mask = kpos < length
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_max - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_table, length, *,
+                           scale=None, interpret=False):
+    """Decode attention over a paged KV pool.
+
+    q: (B, H, D); k_pages/v_pages: (n_pages, H, psz, D);
+    block_table: (B, n_max) int32 page ids; length: (B,) -> (B, H, D).
+
+    ``length`` counts valid tokens (positions < length attend), matching the
+    contiguous kernel above — NOT the inclusive current-position convention
+    of ``core.attention`` decode paths.  When driving this from the engine's
+    ``pos`` array (position of the just-written token), pass ``pos + 1``.
+
+    The sequential grid axis walks each sequence's block table; the page id
+    is scalar-prefetched so the next page's DMA is issued with the gathered
+    address — no materialized contiguous copy of the cache (the same
+    minimal-off-chip-traffic discipline as the paper's L3-resident GEMV,
+    with the pool standing in for on-chip K/V).
+    """
+    B, H, D = q.shape
+    n_pages, Hk, psz, _ = k_pages.shape
+    assert Hk == H, (Hk, H)
+    n_max = block_table.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    grid = (B, H, n_max)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, j, bt, ln: (b, h, 0)),
+            pl.BlockSpec((1, 1, psz, D),
+                         lambda b, h, j, bt, ln: (bt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, psz, D),
+                         lambda b, h, j, bt, ln: (bt[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j, bt, ln: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((D,), jnp.float32),
+            pltpu.VMEM((), jnp.float32),
+            pltpu.VMEM((), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, psz=psz,
+                               n_max=n_max)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_table, length, q, k_pages, v_pages)

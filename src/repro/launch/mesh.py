@@ -11,22 +11,19 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 AUTO = None
-
-
-def _axis_types(n):
-    return (jax.sharding.AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes, devices=None):
-    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)),
-                         devices=devices)
+    return compat.make_mesh(shape, axes, devices=devices)
 
 
 def single_device_mesh():

@@ -28,6 +28,12 @@ def main(argv=None):
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV-cache + chunked prefill (README §Serving)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page pool size (0 = full occupancy + scratch)")
     args = ap.parse_args(argv)
 
     import jax
@@ -45,17 +51,20 @@ def main(argv=None):
     mesh = host_mesh(tp=args.tp, dp=1)
     params = model.init_params(cfg, plan, seed=args.seed)
 
-    dshape = ShapeConfig("serve", "decode", args.seq_budget, args.slots)
-    pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
-    decode_fn, _, _ = steps.make_decode_step(cfg, plan, mesh, dshape)
-    prefill_fn, _, _ = steps.make_prefill_step(cfg, plan, mesh, pshape)
-    decode_fn = jax.jit(decode_fn)
-    prefill_fn = jax.jit(prefill_fn)
-
-    engine = ServingEngine(cfg, plan, mesh, args.slots, args.seq_budget,
-                           params, prefill_fn, decode_fn,
-                           sampler=SamplerConfig(temperature=args.temperature,
-                                                 top_k=40))
+    sampler = SamplerConfig(temperature=args.temperature, top_k=40)
+    if args.paged:
+        engine = ServingEngine.build_paged(
+            cfg, plan, mesh, args.slots, args.seq_budget, params,
+            page_size=args.page_size, n_pages=args.n_pages,
+            prefill_chunk=args.prefill_chunk, sampler=sampler)
+    else:
+        dshape = ShapeConfig("serve", "decode", args.seq_budget, args.slots)
+        pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
+        decode_fn, _, _ = steps.make_decode_step(cfg, plan, mesh, dshape)
+        prefill_fn, _, _ = steps.make_prefill_step(cfg, plan, mesh, pshape)
+        engine = ServingEngine(cfg, plan, mesh, args.slots, args.seq_budget,
+                               params, jax.jit(prefill_fn),
+                               jax.jit(decode_fn), sampler=sampler)
     rng = np.random.RandomState(args.seed)
     t0 = time.time()
     for rid in range(args.requests):

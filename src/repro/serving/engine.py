@@ -1,28 +1,38 @@
 """Batched serving engine: continuous-batching-lite over prefill/decode steps.
 
 Slot-based scheduler (vLLM-style, sized for the paper's single-user edge
-regime up through pod-scale batches): a fixed decode batch of B slots; new
-requests prefill into a free slot cache lane (production note: bucket prompt
-lengths to bound recompilation; exact-length prefill is used here); every
-engine tick runs ONE
-fused decode step for all active slots (the GEMV-batching the paper's
-autoregressive mode maps to on TPU).  EOS/length-complete slots free up and
-are refilled from the queue.
+regime up through pod-scale batches): a fixed decode batch of B slots; every
+engine tick runs ONE fused decode step for all active slots (the
+GEMV-batching the paper's autoregressive mode maps to on TPU).
+EOS/length-complete slots free up and are refilled from the queue.
 
-The engine is mesh-agnostic: it drives whatever (prefill_fn, decode_fn)
-pair ``core.steps`` built — 1-device CPU smoke or a full pod.
+Two cache disciplines, selected by the ``paged`` flag:
+
+* **contiguous** (reference oracle): each slot owns an exact-length cache
+  lane; admission prefills the whole prompt in one step (recompiling per
+  prompt length) and splices the lane in.
+* **paged**: K/V live in a fixed pool of fixed-size pages
+  (``core.kvcache``); admission allocates the slot's block table up front
+  (prompt + max_new_tokens worth — all-or-nothing, so requests queue
+  instead of OOMing mid-flight), prefill advances one fixed-size chunk per
+  tick interleaved with decode, and completion returns the pages to the
+  pool.  One compiled (chunk, decode) pair serves every prompt-length mix.
+
+The engine is mesh-agnostic: it drives whatever step functions
+``core.steps`` built — 1-device CPU smoke or a full pod.
 """
 from __future__ import annotations
 
 import collections
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.kvcache import SCRATCH_PAGE, PageAllocator, pages_needed
 from repro.serving.sampler import SamplerConfig, sample_from_logits
 
 
@@ -50,26 +60,75 @@ class EngineStats:
 class ServingEngine:
     def __init__(self, cfg, plan, mesh, batch_slots: int, seq_budget: int,
                  params, prefill_fn, decode_fn, eos_id: int = 1,
-                 sampler: Optional[SamplerConfig] = None):
+                 sampler: Optional[SamplerConfig] = None, *,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: int = 0, prefill_chunk: int = 0):
         from repro.core import steps as _steps
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
         self.B, self.S = batch_slots, seq_budget
         self.params = params
-        self.prefill_fn = prefill_fn        # jitted, batch=1 lane
-        self.decode_fn = decode_fn          # jitted, batch=B
+        self.prefill_fn = prefill_fn   # jitted: batch=1 lane / paged chunk
+        self.decode_fn = decode_fn     # jitted, batch=B
         self.eos = eos_id
         self.sampler = sampler or SamplerConfig()
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
         self.last_token = np.zeros(batch_slots, np.int32)
-        self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
-                                           seq_budget)
+        self.paged = paged
+        if paged:
+            assert seq_budget % page_size == 0, (seq_budget, page_size)
+            assert prefill_chunk > 0 and seq_budget % prefill_chunk == 0, \
+                (seq_budget, prefill_chunk)
+            self.page_size = page_size
+            self.chunk = prefill_chunk
+            self.n_max_pages = seq_budget // page_size
+            self.allocator = PageAllocator(n_pages)
+            self.slot_pages: List[Optional[list]] = [None] * batch_slots
+            self.slot_state: List[Optional[str]] = [None] * batch_slots
+            self.prefill_done = np.zeros(batch_slots, np.int32)
+            self.cache = _steps.zero_paged_cache_for(cfg, plan, mesh,
+                                                     n_pages, page_size)
+        else:
+            self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
+                                               seq_budget)
         self.stats = EngineStats()
         self._rng = np.random.RandomState(0)
 
+    @classmethod
+    def build_paged(cls, cfg, plan, mesh, batch_slots: int, seq_budget: int,
+                    params, *, page_size: int = 16, n_pages: int = 0,
+                    prefill_chunk: int = 16, eos_id: int = 1,
+                    sampler: Optional[SamplerConfig] = None):
+        """Construct a paged engine, compiling its (chunk, decode) pair.
+
+        ``n_pages`` defaults to full occupancy (every slot at budget) plus
+        the scratch page; pass something smaller to exercise admission
+        control under memory pressure."""
+        from repro.core import steps as _steps
+        n_max = seq_budget // page_size
+        n_pages = n_pages or batch_slots * n_max + 1
+        dec, _, _ = _steps.make_paged_decode_step(
+            cfg, plan, mesh, batch_slots, n_pages, page_size, n_max)
+        chunk_fn, _, _ = _steps.make_prefill_chunk_step(
+            cfg, plan, mesh, prefill_chunk, n_pages, page_size, n_max)
+        return cls(cfg, plan, mesh, batch_slots, seq_budget, params,
+                   jax.jit(chunk_fn), jax.jit(dec), eos_id=eos_id,
+                   sampler=sampler, paged=True, page_size=page_size,
+                   n_pages=n_pages, prefill_chunk=prefill_chunk)
+
     # ------------------------------------------------------------------ API
     def submit(self, req: Request):
+        if self.paged:
+            assert len(req.prompt) + req.max_new_tokens <= self.S, \
+                "request exceeds the sequence budget"
+            need = pages_needed(len(req.prompt) + req.max_new_tokens,
+                                self.page_size)
+            usable = self.allocator.n_pages - self.allocator.n_reserved
+            if need > usable:       # reject now, not mid-run at admission
+                raise RuntimeError(
+                    f"request {req.rid} needs {need} pages; the pool only "
+                    f"has {usable} usable")
         req.t_submit = time.monotonic()
         self.queue.append(req)
 
@@ -81,6 +140,8 @@ class ServingEngine:
 
     # ----------------------------------------------------------------- tick
     def tick(self):
+        if self.paged:
+            return self._tick_paged()
         self._admit()
         if not any(self.slots):
             return
@@ -96,23 +157,30 @@ class ServingEngine:
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
-            tok = int(toks[b])
-            if not req.out_tokens:
-                req.t_first_token = now
-                self.stats.ttft_s.append(now - req.t_submit)
-            req.out_tokens.append(tok)
-            self.pos[b] += 1
-            self.last_token[b] = tok
-            self.stats.decoded_tokens += 1
-            if tok == self.eos or len(req.out_tokens) >= req.max_new_tokens \
-                    or self.pos[b] >= self.S - 1:
-                req.done = True
-                req.t_done = now
-                self.stats.tpot_s.append(
-                    (now - req.t_first_token) /
-                    max(len(req.out_tokens) - 1, 1))
-                self.slots[b] = None
+            self._emit(b, req, int(toks[b]), now)
         self.stats.ticks += 1
+
+    def _emit(self, b: int, req: Request, tok: int, now: float):
+        """Record one decoded token for slot b; retire the slot when done."""
+        if not req.out_tokens:
+            req.t_first_token = now
+            self.stats.ttft_s.append(now - req.t_submit)
+        req.out_tokens.append(tok)
+        self.pos[b] += 1
+        self.last_token[b] = tok
+        self.stats.decoded_tokens += 1
+        if tok == self.eos or len(req.out_tokens) >= req.max_new_tokens \
+                or self.pos[b] >= self.S - 1:
+            req.done = True
+            req.t_done = now
+            self.stats.tpot_s.append(
+                (now - req.t_first_token) /
+                max(len(req.out_tokens) - 1, 1))
+            self.slots[b] = None
+            if self.paged:
+                self.allocator.free(self.slot_pages[b])
+                self.slot_pages[b] = None
+                self.slot_state[b] = None
 
     def _admit(self):
         for b in range(self.B):
@@ -143,12 +211,96 @@ class ServingEngine:
         self.last_token[b] = int(tok)
         req.out_tokens = []
 
+    # ------------------------------------------------------------ paged tick
+    def _tick_paged(self):
+        self._admit_paged()
+        for b in range(self.B):
+            if self.slots[b] is not None and self.slot_state[b] == "prefill":
+                self._prefill_chunk(b)
+        self._decode_tick_paged()
+        self.stats.ticks += 1
+
+    def _admit_paged(self):
+        """Fill free slots from the queue, page allocation permitting.
+
+        All-or-nothing FIFO admission: the head request either gets its full
+        page budget (prompt + max_new_tokens) or the queue waits for slot
+        completions to reclaim pages."""
+        for b in range(self.B):
+            if self.slots[b] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            need = pages_needed(len(req.prompt) + req.max_new_tokens,
+                                self.page_size)
+            pages = self.allocator.alloc(need)
+            if pages is None:        # impossible requests rejected at submit
+                break                # feasible: wait for reclamation
+            self.queue.popleft()
+            self.slots[b] = req
+            self.slot_pages[b] = pages
+            self.slot_state[b] = "prefill"
+            self.prefill_done[b] = 0
+            self.pos[b] = 0
+            self.last_token[b] = 0
+
+    def _bt_row(self, b: int) -> np.ndarray:
+        row = np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
+        pages = self.slot_pages[b]
+        if pages is not None:
+            row[:len(pages)] = pages
+        return row
+
+    def _prefill_chunk(self, b: int):
+        """Advance slot b's prefill by one fixed-size chunk."""
+        req = self.slots[b]
+        L, C = len(req.prompt), self.chunk
+        c0 = int(self.prefill_done[b])
+        chunk_toks = np.zeros((1, C), np.int32)
+        n = min(C, L - c0)
+        chunk_toks[0, :n] = req.prompt[c0:c0 + n]
+        last_idx = min(L - 1 - c0, C - 1)
+        with self.mesh:
+            logits, self.cache = self.prefill_fn(
+                self.params, self.cache, jnp.asarray(chunk_toks),
+                jnp.asarray(c0, jnp.int32), jnp.asarray(last_idx, jnp.int32),
+                jnp.asarray(self._bt_row(b)[None]))
+        self.prefill_done[b] = c0 + C
+        if c0 + C >= L:                  # prompt fully resident
+            self.stats.prefills += 1
+            logits = np.asarray(jax.device_get(logits)).astype(np.float32)
+            tok = sample_from_logits(logits, self.sampler,
+                                     self.cfg.vocab_size, self._rng)[0]
+            self.pos[b] = L
+            self.last_token[b] = int(tok)
+            req.out_tokens = []
+            self.slot_state[b] = "decode"
+
+    def _decode_tick_paged(self):
+        active = [b for b in range(self.B)
+                  if self.slots[b] is not None
+                  and self.slot_state[b] == "decode"]
+        if not active:
+            return
+        # idle / prefilling lanes ride along pointed at the scratch page
+        bt = np.stack([self._bt_row(b) if b in active else
+                       np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
+                       for b in range(self.B)])
+        pos = np.where(np.isin(np.arange(self.B), active), self.pos, 0)
+        with self.mesh:
+            logits, self.cache = self.decode_fn(
+                self.params, self.cache,
+                jnp.asarray(self.last_token[:, None]),
+                jnp.asarray(pos.astype(np.int32)), jnp.asarray(bt))
+        logits = np.asarray(jax.device_get(logits)).astype(np.float32)
+        toks = sample_from_logits(logits, self.sampler,
+                                  self.cfg.vocab_size, self._rng)
+        now = time.monotonic()
+        for b in active:
+            self._emit(b, self.slots[b], int(toks[b]), now)
+
 
 def _splice_cache(big, lane, b):
     def leaf(big_l, lane_l):
-        if big_l.ndim >= 2 and big_l.shape[1] == lane_l.shape[1] and \
-                lane_l.shape[0] == big_l.shape[0]:
-            pass
         return big_l.at[:, b:b + 1].set(lane_l[:, 0:1]) \
             if big_l.ndim >= 2 else big_l
     return jax.tree_util.tree_map(leaf, big, lane)

@@ -8,10 +8,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
-AXT = (jax.sharding.AxisType.Auto,)
+from repro import compat  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=AXT * 2,
-                         devices=jax.devices()[:1])
+    return compat.make_mesh((1, 1), ("data", "model"),
+                            devices=jax.devices()[:1])

@@ -1,7 +1,10 @@
 """Sampler tests + extra hypothesis properties (attention, analytics)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.serving.sampler import SamplerConfig, merged_topk_sample, \
     sample_from_logits

@@ -127,7 +127,10 @@ def test_analytic_flops_match_cost_analysis_unrolled(mesh1):
     with mesh1:
         compiled = jax.jit(fwd).lower(
             params, jax.ShapeDtypeStruct((B, S), jnp.int32)).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # JAX < 0.5: one dict per device
+        ca = ca[0]
+    hlo_flops = ca["flops"]
 
     cc.set_axis_sizes({"data": 1, "model": 1})
     shape = ShapeConfig("t", "prefill", S, B)
@@ -252,9 +255,9 @@ def test_context_parallel_ssm_subprocess():
     cfg = reduced(get_config("mamba2-370m"), dtype="float32")
     rng = np.random.RandomState(0)
     B, S = 2, 64
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                         devices=jax.devices()[:1])
+    from repro import compat
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            devices=jax.devices()[:1])
     tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
     batch = {"tokens": tokens, "labels": tokens}
     losses = []

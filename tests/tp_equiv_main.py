@@ -22,13 +22,13 @@ from repro.configs.base import ShapeConfig  # noqa: E402
 from repro.core import model, steps  # noqa: E402
 from repro.core.partition import ShardingPlan  # noqa: E402
 
-AXT = (jax.sharding.AxisType.Auto,)
+from repro import compat  # noqa: E402
 
 
 def meshes():
-    m1 = jax.make_mesh((1, 1), ("data", "model"), axis_types=AXT * 2,
-                       devices=jax.devices()[:1])
-    m8 = jax.make_mesh((2, 4), ("data", "model"), axis_types=AXT * 2)
+    m1 = compat.make_mesh((1, 1), ("data", "model"),
+                          devices=jax.devices()[:1])
+    m8 = compat.make_mesh((2, 4), ("data", "model"))
     return m1, m8
 
 

@@ -17,14 +17,14 @@ from repro.configs.base import ShapeConfig  # noqa: E402
 from repro.core import steps  # noqa: E402
 from repro.core.partition import ShardingPlan  # noqa: E402
 
-AX = (jax.sharding.AxisType.Auto,)
+from repro import compat  # noqa: E402
 
 
 def main():
     cfg = reduced(get_config("qwen3-0.6b"), dtype="float32")
     B, S = 4, 32
     shape = ShapeConfig("t", "train", S, B)
-    mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=AX * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     plan = ShardingPlan(tp=4)
     rng = np.random.RandomState(0)
     batches = []
