@@ -10,7 +10,6 @@ from __future__ import annotations
 import json
 import os
 
-from repro.launch.roofline import fmt_seconds
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..",
                        "results_dryrun_sp.json")

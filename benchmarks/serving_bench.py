@@ -1,0 +1,132 @@
+"""Serving throughput bench: contiguous vs paged vs paged+prefix-cache.
+
+Drives the full ServingEngine on a shared-system-prompt workload (every
+request = common prefix + unique suffix — the traffic shape the radix
+prefix cache targets) and reports tokens/s, TTFT, and prefix-cache
+effectiveness (prefill tokens skipped, hit rate, COW copies).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke --json \
+        BENCH_serving.json
+
+All prompts share one length so the contiguous oracle compiles once; the
+paged modes would handle mixed lengths with the same single compile.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+# --smoke swaps in a tiny reduced config: same code path, CI-friendly wall
+# time, and a BENCH_serving.json artifact for the perf trajectory.
+SIZES = {
+    "full": {"requests": 24, "slots": 4, "seq_budget": 256, "prefix": 96,
+             "suffix": 24, "max_new": 24, "page_size": 16, "chunk": 32},
+    "smoke": {"requests": 6, "slots": 2, "seq_budget": 64, "prefix": 24,
+              "suffix": 6, "max_new": 6, "page_size": 8, "chunk": 16},
+}
+
+
+def build_requests(sz, vocab, seed=0):
+    from repro.serving import Request
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(2, vocab, sz["prefix"]).astype(np.int32)
+    out = []
+    for rid in range(sz["requests"]):
+        suf = rng.randint(2, vocab, sz["suffix"]).astype(np.int32)
+        out.append(Request(rid=rid,
+                           prompt=np.concatenate([shared, suf]),
+                           max_new_tokens=sz["max_new"]))
+    return out
+
+
+def run_mode(mode, cfg, plan, mesh, params, sz):
+    import jax
+    from repro.configs.base import ShapeConfig
+    from repro.core import steps
+    from repro.serving import ServingEngine
+
+    if mode == "contiguous":
+        dshape = ShapeConfig("sb_d", "decode", sz["seq_budget"], sz["slots"])
+        pshape = ShapeConfig("sb_p", "decode", sz["seq_budget"], 1)
+        dec, _, _ = steps.make_decode_step(cfg, plan, mesh, dshape)
+        pre, _, _ = steps.make_prefill_step(cfg, plan, mesh, pshape)
+        eng = ServingEngine(cfg, plan, mesh, sz["slots"], sz["seq_budget"],
+                            params, jax.jit(pre), jax.jit(dec))
+    else:
+        eng = ServingEngine.build_paged(
+            cfg, plan, mesh, sz["slots"], sz["seq_budget"], params,
+            page_size=sz["page_size"], prefill_chunk=sz["chunk"],
+            prefix_cache=(mode == "prefix"))
+    reqs = build_requests(sz, cfg.vocab_size)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    stats = eng.run(max_ticks=50_000)
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    row = {"mode": mode,
+           "requests": sz["requests"],
+           "decoded_tokens": stats.decoded_tokens,
+           "tokens_per_s": stats.decoded_tokens / dt,
+           "ttft_p50_ms": float(np.median(stats.ttft_s)) * 1e3,
+           "ttft_p95_ms": float(np.percentile(stats.ttft_s, 95)) * 1e3,
+           "tpot_p50_ms": float(np.median(stats.tpot_s)) * 1e3,
+           "prefill_tokens_skipped": stats.prefill_tokens_skipped,
+           "prefix_hit_rate": stats.prefix_hit_rate,
+           "cow_copies": stats.cow_copies,
+           "wall_s": dt}
+    if eng.allocator is not None:
+        row["pages_allocated"] = eng.allocator.total_allocated
+    if mode == "prefix":
+        # the whole point of the mode: the shared prefix is never recomputed
+        assert stats.prefill_tokens_skipped > 0, \
+            "prefix mode skipped no prefill tokens on a shared-prefix workload"
+    return row
+
+
+def rows(smoke: bool = False):
+    import jax
+    from repro import compat
+    from repro.configs import get_config, reduced
+    from repro.core import model
+    from repro.core.partition import ShardingPlan
+
+    sz = SIZES["smoke" if smoke else "full"]
+    cfg = reduced(get_config("tinyllama-42m"), dtype="float32")
+    plan = ShardingPlan(tp=1, kv_cache_dtype="float32")
+    mesh = compat.make_mesh((1, 1), ("data", "model"),
+                            devices=jax.devices()[:1])
+    params = model.init_params(cfg, plan)
+    return [run_mode(m, cfg, plan, mesh, params, sz)
+            for m in ("contiguous", "paged", "prefix")]
+
+
+def main(smoke=False, json_path=None):
+    import jax
+    out = rows(smoke=smoke)
+    keys = list(out[-1])
+    print(",".join(keys))
+    for r in out:
+        print(",".join(f"{r.get(k):.4g}" if isinstance(r.get(k), float)
+                       else str(r.get(k, "")) for k in keys))
+    if json_path:
+        payload = {"bench": "serving", "mode": "smoke" if smoke else "full",
+                   "unix_time": time.time(), "jax": jax.__version__,
+                   "rows": out}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI bench-smoke job)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to a BENCH_*.json artifact")
+    a = ap.parse_args()
+    main(smoke=a.smoke, json_path=a.json)

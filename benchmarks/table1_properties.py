@@ -9,12 +9,11 @@ architecture.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from repro.configs import ASSIGNED, get_config, reduced
 from repro.configs.base import FFN_NONE, ShapeConfig
 from repro.core import collectives as cc
-from repro.core import model, steps
+from repro.core import steps
 from repro.core.partition import ShardingPlan, duplication_report
 
 

@@ -12,9 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.model import (_init_full, _is_spec, _map_template,
-                              _mask_invalid_heads, _with_reps, model_template,
-                              shard_full)
+from repro.core.model import (_map_template, _mask_invalid_heads,
+                              _with_reps, model_template, shard_full)
 from repro.core.partition import ModelLayout, dim_layout, model_layout
 
 

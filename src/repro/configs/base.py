@@ -9,8 +9,7 @@ plan and FLOP/byte counts.  Configs are registered by id and selectable via
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 # ---------------------------------------------------------------------------

@@ -12,13 +12,12 @@ All numbers are PER DEVICE per step.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.configs.base import (ATTN_WINDOW, FFN_DENSE, FFN_MOE, FFN_NONE,
-                                MIX_ATTN, MIX_HYBRID, MIX_SSM, ModelConfig,
+from repro.configs.base import (ATTN_WINDOW, FFN_DENSE, FFN_MOE, MIX_ATTN,
+                                MIX_HYBRID, MIX_SSM, ModelConfig,
                                 ShapeConfig)
 from repro.core.partition import ShardingPlan, dim_layout, model_layout
 

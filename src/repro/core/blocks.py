@@ -74,9 +74,6 @@ def dp_linear_index(dp_axes):
 # ---------------------------------------------------------------------------
 
 def _project_qkv(xn, pa, cfg, lay):
-    B, S, E = xn.shape
-    hl = lay.attn
-    d = cfg.head_dim_
     q = jnp.einsum("bse,ehd->bshd", xn, _lo(pa["wq"]))
     k = jnp.einsum("bse,ehd->bshd", xn, _lo(pa["wk"]))
     v = jnp.einsum("bse,ehd->bshd", xn, _lo(pa["wv"]))
@@ -330,7 +327,6 @@ def ssm_mixer(xn, ps, cfg, plan, lay, mode, ssm_cache):
     B, S, E = xn.shape
     H = lay.ssm.hq_loc
     Pd = cfg.ssm_head_dim
-    N = cfg.ssm_state
     cp = bool(plan.cp_axes) and mode != "decode" and \
         cc.axis_size(plan.cp_axes) > 1
     z = jnp.einsum("bse,ehp->bshp", xn, _lo(ps["in_z"]))         # (B,S,H,P)

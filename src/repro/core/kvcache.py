@@ -183,12 +183,20 @@ def zero_paged_cache(tmpl):
 
 
 class PageAllocator:
-    """Host-side block-pool allocator (page 0 reserved as scratch).
+    """Host-side refcounted block-pool allocator (page 0 reserved as scratch).
 
     All-or-nothing allocation: a request either gets every page it needs up
     front (prompt + max_new_tokens worth) or stays queued — admission control
     instead of mid-flight OOM.  Freed pages return to the pool LIFO, so a
-    steady-state request mix reuses a small working set."""
+    steady-state request mix reuses a small working set.
+
+    Pages carry a reference count so they can be shared: a freshly allocated
+    page has one owner; the prefix cache and additional serving slots take
+    extra refs via ``incref``.  A page returns to the free list only when its
+    last ref drops (``decref``; ``free`` is a synonym for the sole-owner
+    case).  Shared pages are immutable by convention — a slot that must
+    append into one first takes a private copy (copy-on-write; see
+    ``serving.prefix_cache``)."""
 
     def __init__(self, n_pages: int, n_reserved: int = 1):
         assert n_pages > n_reserved, (n_pages, n_reserved)
@@ -196,25 +204,47 @@ class PageAllocator:
         self.n_reserved = n_reserved
         self._free = list(range(n_pages - 1, n_reserved - 1, -1))
         self._free_set = set(self._free)     # O(1) double-free detection
+        self._rc = [0] * n_pages
+        self.total_allocated = 0             # pages ever handed out (stats)
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
+    def refcount(self, page: int) -> int:
+        return self._rc[page]
+
     def alloc(self, n: int):
-        """-> list of n page ids, or None if the pool can't cover n."""
+        """-> list of n page ids (each refcount 1), or None if the pool
+        can't cover n."""
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(out)
+        for p in out:
+            self._rc[p] = 1
+        self.total_allocated += n
         return out
 
-    def free(self, pages):
+    def incref(self, pages):
+        """Add one ref per page (sharing an already-live page)."""
+        for p in pages:
+            assert self._rc[p] > 0, f"incref of unallocated page {p}"
+            self._rc[p] += 1
+
+    def decref(self, pages):
+        """Drop one ref per page; pages whose last ref drops are freed."""
         for p in pages:
             assert p >= self.n_reserved, f"freeing reserved page {p}"
             assert p not in self._free_set, f"double free of page {p}"
-            self._free.append(p)
-            self._free_set.add(p)
+            self._rc[p] -= 1
+            if self._rc[p] == 0:
+                self._free.append(p)
+                self._free_set.add(p)
+
+    def free(self, pages):
+        """Release sole-owner pages (drop one ref each)."""
+        self.decref(pages)
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:

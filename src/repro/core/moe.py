@@ -21,7 +21,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import collectives as cc
 from repro.core.layers import activation
 
 

@@ -20,11 +20,9 @@ property — the on-chip-stationary invariant of the paper.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
-import numpy as np
 
 from repro.configs.base import ModelConfig
 
@@ -202,7 +200,6 @@ def duplication_report(cfg: ModelConfig, plan: ShardingPlan) -> dict:
     lay = model_layout(cfg, plan)
     d = cfg.head_dim_
     E = cfg.d_model
-    per_layer_dup = 0.0
     per_layer_pad = 0.0
     specs = cfg.layer_specs()
     n_attn = sum(1 for s in specs if s.mixer in ("attn", "hybrid"))

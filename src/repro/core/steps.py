@@ -547,6 +547,34 @@ def make_prefill_chunk_step(cfg, plan, mesh, chunk: int, n_pages: int,
     return fn, t, s
 
 
+def make_page_copy_step(cfg, plan, mesh, n_pages: int, page_size: int):
+    """-> (copy_fn(cache, src (), dst ()) -> cache, templates, specs).
+
+    Copies one page's K/V across every layer pool — the mechanism behind
+    copy-on-write divergence: a slot that must append into a shared page
+    (radix prefix cache, ``serving.prefix_cache``) first duplicates it into
+    a private page, then writes only the copy.  Page ids are data, so one
+    compiled step serves every (src, dst) pair."""
+    _, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
+                                           page_size)
+
+    def per_shard(cache, src, dst):
+        def leaf(pool):                      # (reps, n_pages, G, psz, D)
+            page = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(pool, page, dst,
+                                                       axis=1)
+        return jax.tree_util.tree_map(leaf, cache)
+
+    s = {"cache": cache_s, "src": P(), "dst": P()}
+    t = {"cache": cache_t,
+         "src": jax.ShapeDtypeStruct((), jnp.int32),
+         "dst": jax.ShapeDtypeStruct((), jnp.int32)}
+    fn = _shard_map(per_shard, mesh,
+                    in_specs=(s["cache"], s["src"], s["dst"]),
+                    out_specs=s["cache"])
+    return fn, t, s
+
+
 def zero_paged_cache_for(cfg, plan, mesh, n_pages, page_size):
     lay = model_layout(cfg, plan)
     tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size)

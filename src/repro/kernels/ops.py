@@ -9,8 +9,6 @@ from __future__ import annotations
 
 from contextlib import contextmanager
 
-import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pl_decode

@@ -16,10 +16,8 @@ Sources (see DESIGN.md §5 and EXPERIMENTS.md §Roofline):
 from __future__ import annotations
 
 import dataclasses
-import json
 from dataclasses import dataclass
 
-import numpy as np
 
 # TPU v5e-class constants (from the assignment spec)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip

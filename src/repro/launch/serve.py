@@ -34,7 +34,16 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--n-pages", type=int, default=0,
                     help="page pool size (0 = full occupancy + scratch)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix sharing with copy-on-write pages "
+                         "(implies --paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common system-prompt prefix of this "
+                         "many tokens to every request")
     args = ap.parse_args(argv)
+    if args.shared_prefix + args.prompt_len + args.max_new > args.seq_budget:
+        ap.error("--shared-prefix + --prompt-len + --max-new must fit "
+                 "--seq-budget")
 
     import jax
     from repro.configs import get_config, reduced
@@ -52,11 +61,12 @@ def main(argv=None):
     params = model.init_params(cfg, plan, seed=args.seed)
 
     sampler = SamplerConfig(temperature=args.temperature, top_k=40)
-    if args.paged:
+    if args.paged or args.prefix_cache:
         engine = ServingEngine.build_paged(
             cfg, plan, mesh, args.slots, args.seq_budget, params,
             page_size=args.page_size, n_pages=args.n_pages,
-            prefill_chunk=args.prefill_chunk, sampler=sampler)
+            prefill_chunk=args.prefill_chunk, sampler=sampler,
+            prefix_cache=args.prefix_cache)
     else:
         dshape = ShapeConfig("serve", "decode", args.seq_budget, args.slots)
         pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
@@ -66,20 +76,37 @@ def main(argv=None):
                                params, jax.jit(prefill_fn),
                                jax.jit(decode_fn), sampler=sampler)
     rng = np.random.RandomState(args.seed)
+    shared = rng.randint(2, cfg.vocab_size,
+                         args.shared_prefix).astype(np.int32)
     t0 = time.time()
     for rid in range(args.requests):
         prompt = rng.randint(2, cfg.vocab_size,
                              rng.randint(4, args.prompt_len + 1)
                              ).astype(np.int32)
+        prompt = np.concatenate([shared, prompt]).astype(np.int32)
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=args.max_new))
     stats = engine.run()
     dt = time.time() - t0
     print(f"requests={args.requests} ticks={stats.ticks} "
           f"prefills={stats.prefills} tokens={stats.decoded_tokens}")
-    print(f"throughput={stats.decoded_tokens / dt:.1f} tok/s "
-          f"ttft_p50={np.median(stats.ttft_s) * 1e3:.1f}ms "
-          f"tpot_p50={np.median(stats.tpot_s) * 1e3:.1f}ms")
+    if stats.ttft_s:
+        print(f"throughput={stats.decoded_tokens / dt:.1f} tok/s "
+              f"ttft_p50={np.median(stats.ttft_s) * 1e3:.1f}ms "
+              f"ttft_p95={np.percentile(stats.ttft_s, 95) * 1e3:.1f}ms "
+              f"tpot_p50={np.median(stats.tpot_s) * 1e3:.1f}ms")
+    else:
+        print("no tokens emitted")
+    if args.prefix_cache:
+        print(f"prefix_cache: hit_rate={stats.prefix_hit_rate:.2f} "
+              f"({stats.prefix_hits}/{stats.prefix_lookups} lookups) "
+              f"prefill_tokens_skipped={stats.prefill_tokens_skipped} "
+              f"cow_copies={stats.cow_copies} "
+              f"cached_pages={engine.prefix_cache.n_cached_pages} "
+              f"evictions={engine.prefix_cache.evictions}")
+    slowest = sorted(stats.request_ttft.items(), key=lambda kv: -kv[1])[:3]
+    print("ttft_per_request_worst3: " +
+          " ".join(f"rid{r}={t * 1e3:.1f}ms" for r, t in slowest))
     return 0
 
 

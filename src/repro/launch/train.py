@@ -12,7 +12,6 @@ tests/test_fault_tolerance.py and examples/train_small.py.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time

@@ -7,7 +7,6 @@ owns — optimizer memory follows the paper's zero-duplication property.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable, Optional
 
 import jax

@@ -10,7 +10,6 @@ re-scatter); DP changes only affect batch placement.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 

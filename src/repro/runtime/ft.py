@@ -10,9 +10,7 @@ training subprocess mid-run and verifying bit-exact continuation.
 from __future__ import annotations
 
 import os
-import signal
 import subprocess
-import sys
 import threading
 import time
 from dataclasses import dataclass

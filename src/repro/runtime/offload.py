@@ -17,10 +17,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 import jax
-import numpy as np
 
 
 @dataclass

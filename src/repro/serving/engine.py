@@ -1,10 +1,17 @@
 """Batched serving engine: continuous-batching-lite over prefill/decode steps.
 
-Slot-based scheduler (vLLM-style, sized for the paper's single-user edge
-regime up through pod-scale batches): a fixed decode batch of B slots; every
-engine tick runs ONE fused decode step for all active slots (the
-GEMV-batching the paper's autoregressive mode maps to on TPU).
+Slot-based continuous batching (vLLM-style, sized for the paper's
+single-user edge regime up through pod-scale batches): a fixed decode batch
+of B slots; every engine tick runs ONE fused decode step for all active
+slots (the GEMV-batching the paper's autoregressive mode maps to on TPU).
 EOS/length-complete slots free up and are refilled from the queue.
+
+The engine is pure **mechanism**: it owns the device-side state (KV pool,
+block tables, positions) and executes step functions.  All **policy** —
+admission order, page budgeting, prefix reuse, eviction — lives in
+``serving.scheduler`` behind the ``Scheduler`` interface; the engine
+executes the scheduler's ``Admission`` decisions and reports lifecycle
+events back.
 
 Two cache disciplines, selected by the ``paged`` flag:
 
@@ -17,13 +24,16 @@ Two cache disciplines, selected by the ``paged`` flag:
   instead of OOMing mid-flight), prefill advances one fixed-size chunk per
   tick interleaved with decode, and completion returns the pages to the
   pool.  One compiled (chunk, decode) pair serves every prompt-length mix.
+  With ``prefix_cache=True`` a radix tree maps cached prompt prefixes to
+  refcounted page runs: admission starts prefill at the first uncached
+  token, copying partially-shared pages copy-on-write
+  (``serving.prefix_cache``).
 
 The engine is mesh-agnostic: it drives whatever step functions
 ``core.steps`` built — 1-device CPU smoke or a full pod.
 """
 from __future__ import annotations
 
-import collections
 import time
 from dataclasses import dataclass, field
 from typing import List, Optional
@@ -32,8 +42,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kvcache import SCRATCH_PAGE, PageAllocator, pages_needed
+from repro.core.kvcache import SCRATCH_PAGE, PageAllocator
+from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampler import SamplerConfig, sample_from_logits
+from repro.serving.scheduler import Admission, FCFSScheduler
 
 
 @dataclass
@@ -53,8 +65,22 @@ class EngineStats:
     ticks: int = 0
     prefills: int = 0
     decoded_tokens: int = 0
-    ttft_s: list = field(default_factory=list)
+    prefill_tokens_skipped: int = 0    # prompt tokens served from the cache
+    cow_copies: int = 0
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
     tpot_s: list = field(default_factory=list)
+    request_ttft: dict = field(default_factory=dict)   # rid -> seconds
+
+    @property
+    def ttft_s(self) -> list:
+        """TTFT samples in first-token order (derived per request)."""
+        return list(self.request_ttft.values())
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / self.prefix_lookups \
+            if self.prefix_lookups else 0.0
 
 
 class ServingEngine:
@@ -62,7 +88,8 @@ class ServingEngine:
                  params, prefill_fn, decode_fn, eos_id: int = 1,
                  sampler: Optional[SamplerConfig] = None, *,
                  paged: bool = False, page_size: int = 16,
-                 n_pages: int = 0, prefill_chunk: int = 0):
+                 n_pages: int = 0, prefill_chunk: int = 0,
+                 prefix_cache: bool = False, scheduler=None):
         from repro.core import steps as _steps
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
         self.B, self.S = batch_slots, seq_budget
@@ -71,11 +98,13 @@ class ServingEngine:
         self.decode_fn = decode_fn     # jitted, batch=B
         self.eos = eos_id
         self.sampler = sampler or SamplerConfig()
-        self.queue: collections.deque = collections.deque()
-        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.admissions: List[Optional[Admission]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
         self.last_token = np.zeros(batch_slots, np.int32)
         self.paged = paged
+        self.stats = EngineStats()
+        self.allocator = None
+        self.prefix_cache = None
         if paged:
             assert seq_budget % page_size == 0, (seq_budget, page_size)
             assert prefill_chunk > 0 and seq_budget % prefill_chunk == 0, \
@@ -84,22 +113,33 @@ class ServingEngine:
             self.chunk = prefill_chunk
             self.n_max_pages = seq_budget // page_size
             self.allocator = PageAllocator(n_pages)
-            self.slot_pages: List[Optional[list]] = [None] * batch_slots
+            if prefix_cache:
+                self.prefix_cache = RadixPrefixCache(self.allocator,
+                                                     page_size)
             self.slot_state: List[Optional[str]] = [None] * batch_slots
             self.prefill_done = np.zeros(batch_slots, np.int32)
             self.cache = _steps.zero_paged_cache_for(cfg, plan, mesh,
                                                      n_pages, page_size)
+            copy_fn, _, _ = _steps.make_page_copy_step(cfg, plan, mesh,
+                                                       n_pages, page_size)
+            self.copy_fn = jax.jit(copy_fn)
         else:
+            assert not prefix_cache, "prefix cache requires the paged engine"
             self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
                                                seq_budget)
-        self.stats = EngineStats()
+        self.sched = scheduler or FCFSScheduler(
+            seq_budget=seq_budget, allocator=self.allocator,
+            page_size=page_size if paged else 0,
+            prefix_cache=self.prefix_cache, stats=self.stats)
+        self._rids: set = set()
         self._rng = np.random.RandomState(0)
 
     @classmethod
     def build_paged(cls, cfg, plan, mesh, batch_slots: int, seq_budget: int,
                     params, *, page_size: int = 16, n_pages: int = 0,
                     prefill_chunk: int = 16, eos_id: int = 1,
-                    sampler: Optional[SamplerConfig] = None):
+                    sampler: Optional[SamplerConfig] = None,
+                    prefix_cache: bool = False, scheduler=None):
         """Construct a paged engine, compiling its (chunk, decode) pair.
 
         ``n_pages`` defaults to full occupancy (every slot at budget) plus
@@ -115,25 +155,25 @@ class ServingEngine:
         return cls(cfg, plan, mesh, batch_slots, seq_budget, params,
                    jax.jit(chunk_fn), jax.jit(dec), eos_id=eos_id,
                    sampler=sampler, paged=True, page_size=page_size,
-                   n_pages=n_pages, prefill_chunk=prefill_chunk)
+                   n_pages=n_pages, prefill_chunk=prefill_chunk,
+                   prefix_cache=prefix_cache, scheduler=scheduler)
 
     # ------------------------------------------------------------------ API
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        """Requests in flight, by slot (derived from the admissions)."""
+        return [a.req if a is not None else None for a in self.admissions]
+
     def submit(self, req: Request):
-        if self.paged:
-            assert len(req.prompt) + req.max_new_tokens <= self.S, \
-                "request exceeds the sequence budget"
-            need = pages_needed(len(req.prompt) + req.max_new_tokens,
-                                self.page_size)
-            usable = self.allocator.n_pages - self.allocator.n_reserved
-            if need > usable:       # reject now, not mid-run at admission
-                raise RuntimeError(
-                    f"request {req.rid} needs {need} pages; the pool only "
-                    f"has {usable} usable")
+        if req.rid in self._rids:     # rids key the per-request stats
+            raise RuntimeError(f"duplicate request id {req.rid}")
+        self.sched.submit(req)        # raises on infeasible requests
+        self._rids.add(req.rid)
         req.t_submit = time.monotonic()
-        self.queue.append(req)
 
     def run(self, max_ticks: int = 10_000):
-        while (self.queue or any(self.slots)) and \
+        while (self.sched.has_pending() or
+               any(a is not None for a in self.admissions)) and \
                 self.stats.ticks < max_ticks:
             self.tick()
         return self.stats
@@ -164,7 +204,7 @@ class ServingEngine:
         """Record one decoded token for slot b; retire the slot when done."""
         if not req.out_tokens:
             req.t_first_token = now
-            self.stats.ttft_s.append(now - req.t_submit)
+            self.stats.request_ttft[req.rid] = now - req.t_submit
         req.out_tokens.append(tok)
         self.pos[b] += 1
         self.last_token[b] = tok
@@ -176,18 +216,16 @@ class ServingEngine:
             self.stats.tpot_s.append(
                 (now - req.t_first_token) /
                 max(len(req.out_tokens) - 1, 1))
-            self.slots[b] = None
+            self.sched.on_finish(self.admissions[b])
+            self.admissions[b] = None
             if self.paged:
-                self.allocator.free(self.slot_pages[b])
-                self.slot_pages[b] = None
                 self.slot_state[b] = None
 
     def _admit(self):
-        for b in range(self.B):
-            if self.slots[b] is None and self.queue:
-                req = self.queue.popleft()
-                self._prefill_into(b, req)
-                self.slots[b] = req
+        free = [b for b in range(self.B) if self.admissions[b] is None]
+        for adm in self.sched.plan(free):
+            self._prefill_into(adm.slot, adm.req)
+            self.admissions[adm.slot] = adm
 
     def _prefill_into(self, b: int, req: Request):
         """Prefill a single request and splice its cache into lane b."""
@@ -215,44 +253,44 @@ class ServingEngine:
     def _tick_paged(self):
         self._admit_paged()
         for b in range(self.B):
-            if self.slots[b] is not None and self.slot_state[b] == "prefill":
+            if self.admissions[b] is not None and \
+                    self.slot_state[b] == "prefill":
                 self._prefill_chunk(b)
         self._decode_tick_paged()
         self.stats.ticks += 1
 
     def _admit_paged(self):
-        """Fill free slots from the queue, page allocation permitting.
-
-        All-or-nothing FIFO admission: the head request either gets its full
-        page budget (prompt + max_new_tokens) or the queue waits for slot
-        completions to reclaim pages."""
-        for b in range(self.B):
-            if self.slots[b] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            need = pages_needed(len(req.prompt) + req.max_new_tokens,
-                                self.page_size)
-            pages = self.allocator.alloc(need)
-            if pages is None:        # impossible requests rejected at submit
-                break                # feasible: wait for reclamation
-            self.queue.popleft()
-            self.slots[b] = req
-            self.slot_pages[b] = pages
+        """Execute this tick's admissions from the scheduler."""
+        free = [b for b in range(self.B) if self.admissions[b] is None]
+        for adm in self.sched.plan(free):
+            b = adm.slot
+            self.admissions[b] = adm
             self.slot_state[b] = "prefill"
-            self.prefill_done[b] = 0
+            if adm.cow is not None:
+                src, dst = adm.cow
+                with self.mesh:
+                    self.cache = self.copy_fn(self.cache,
+                                              jnp.asarray(src, jnp.int32),
+                                              jnp.asarray(dst, jnp.int32))
+                self.sched.on_cow_done(adm)
+                self.stats.cow_copies += 1
+            # prefix-cached tokens are already resident: prefill resumes at
+            # the first uncached position
+            self.prefill_done[b] = adm.cached_len
+            self.stats.prefill_tokens_skipped += adm.cached_len
             self.pos[b] = 0
             self.last_token[b] = 0
 
     def _bt_row(self, b: int) -> np.ndarray:
         row = np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
-        pages = self.slot_pages[b]
-        if pages is not None:
-            row[:len(pages)] = pages
+        adm = self.admissions[b]
+        if adm is not None and adm.pages is not None:
+            row[:len(adm.pages)] = adm.pages
         return row
 
     def _prefill_chunk(self, b: int):
         """Advance slot b's prefill by one fixed-size chunk."""
-        req = self.slots[b]
+        req = self.admissions[b].req
         L, C = len(req.prompt), self.chunk
         c0 = int(self.prefill_done[b])
         chunk_toks = np.zeros((1, C), np.int32)
@@ -267,6 +305,7 @@ class ServingEngine:
         self.prefill_done[b] = c0 + C
         if c0 + C >= L:                  # prompt fully resident
             self.stats.prefills += 1
+            self.sched.on_prefill_complete(self.admissions[b])
             logits = np.asarray(jax.device_get(logits)).astype(np.float32)
             tok = sample_from_logits(logits, self.sampler,
                                      self.cfg.vocab_size, self._rng)[0]
@@ -277,7 +316,7 @@ class ServingEngine:
 
     def _decode_tick_paged(self):
         active = [b for b in range(self.B)
-                  if self.slots[b] is not None
+                  if self.admissions[b] is not None
                   and self.slot_state[b] == "decode"]
         if not active:
             return
@@ -296,7 +335,7 @@ class ServingEngine:
                                   self.cfg.vocab_size, self._rng)
         now = time.monotonic()
         for b in active:
-            self._emit(b, self.slots[b], int(toks[b]), now)
+            self._emit(b, self.admissions[b].req, int(toks[b]), now)
 
 
 def _splice_cache(big, lane, b):

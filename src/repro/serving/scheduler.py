@@ -1,0 +1,206 @@
+"""Scheduling policy for the serving engine (policy/mechanism split).
+
+``ServingEngine`` is pure mechanism: it owns the device-side state (page
+pool, block tables, positions) and executes step functions.  Everything
+discretionary — admission order, page budgeting, prefix reuse,
+copy-on-write planning, cache eviction, page release — lives here, behind
+the small ``Scheduler`` interface, so priority / fairness / preemptive
+policies can drop in without touching the engine.
+
+A scheduler communicates decisions as ``Admission`` records; the engine
+executes them (COW page copies, chunked prefill from the first uncached
+token) and reports lifecycle events back (``on_prefill_complete``,
+``on_finish``) for the policy to update its bookkeeping.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.kvcache import pages_needed
+
+
+@dataclass
+class Admission:
+    """One scheduler decision: place ``req`` into engine slot ``slot``.
+
+    pages: the slot's full block-table page run (None for the contiguous
+    engine).  cached_len: prompt tokens already resident via prefix sharing
+    — chunked prefill starts at this offset.  cow: (src, dst) page pair the
+    engine must copy before the slot's first write (divergence out of a
+    shared partial page)."""
+    slot: int
+    req: object
+    pages: Optional[List[int]] = None
+    cached_len: int = 0
+    cow: Optional[Tuple[int, int]] = None
+
+
+class Scheduler:
+    """Policy interface the engine drives.  Implementations own the wait
+    queue and (for paged engines) all allocator / prefix-cache traffic."""
+
+    def submit(self, req) -> None:
+        raise NotImplementedError
+
+    def has_pending(self) -> bool:
+        raise NotImplementedError
+
+    def plan(self, free_slots: List[int]) -> List[Admission]:
+        """Admissions for this tick; at most one per free slot."""
+        raise NotImplementedError
+
+    def on_cow_done(self, adm: Admission) -> None:
+        """The engine copied adm.cow — release the pin on the source."""
+
+    def on_prefill_complete(self, adm: Admission) -> None:
+        """adm's prompt is fully resident (cache-insertion hook)."""
+
+    def on_finish(self, adm: Admission) -> None:
+        """adm's request retired — release its resources."""
+
+
+class FCFSScheduler(Scheduler):
+    """First-come-first-served admission (the seed engine's policy).
+
+    Paged mode adds all-or-nothing page budgeting — the head request either
+    gets its full budget (prompt + max_new_tokens) or the whole queue waits
+    (no mid-flight OOM, no starvation-by-overtaking) — plus optional radix
+    prefix sharing: admission maps the longest cached prefix into the block
+    table, duplicating a partially-shared page copy-on-write, and evicts
+    LRU cache runs when the pool can't cover the remainder."""
+
+    def __init__(self, *, seq_budget: int, allocator=None, page_size: int = 0,
+                 prefix_cache=None, stats=None):
+        self.queue: collections.deque = collections.deque()
+        self.seq_budget = seq_budget
+        self.allocator = allocator
+        self.psz = page_size
+        self.prefix_cache = prefix_cache
+        self.stats = stats
+
+    @property
+    def paged(self) -> bool:
+        return self.allocator is not None
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req) -> None:
+        if len(req.prompt) == 0:
+            raise RuntimeError(f"request {req.rid} has an empty prompt")
+        if self.paged:
+            if len(req.prompt) + req.max_new_tokens > self.seq_budget:
+                raise RuntimeError(
+                    f"request {req.rid} needs {len(req.prompt)} prompt + "
+                    f"{req.max_new_tokens} new tokens; the sequence budget "
+                    f"is {self.seq_budget}")
+            need = pages_needed(len(req.prompt) + req.max_new_tokens,
+                                self.psz)
+            usable = self.allocator.n_pages - self.allocator.n_reserved
+            if need > usable:       # reject now, not mid-run at admission
+                raise RuntimeError(
+                    f"request {req.rid} needs {need} pages; the pool only "
+                    f"has {usable} usable")
+        elif len(req.prompt) >= self.seq_budget:
+            # the contiguous lane needs room past the prompt for decode
+            raise RuntimeError(
+                f"request {req.rid} prompt ({len(req.prompt)} tokens) "
+                f"exceeds the sequence budget {self.seq_budget}")
+        self.queue.append(req)
+
+    def has_pending(self) -> bool:
+        return bool(self.queue)
+
+    # ---------------------------------------------------------- admission
+    def plan(self, free_slots: List[int]) -> List[Admission]:
+        out = []
+        for slot in free_slots:
+            if not self.queue:
+                break
+            if self.paged:
+                adm = self._plan_paged(slot, self.queue[0])
+                if adm is None:     # head-of-line waits for reclamation
+                    break
+            else:
+                adm = Admission(slot=slot, req=self.queue[0])
+            self.queue.popleft()
+            out.append(adm)
+        return out
+
+    def _can_reclaim(self, need: int) -> bool:
+        """True if evicting cache runs can actually cover a ``need``-page
+        allocation (free pages + eventually-evictable cached pages)."""
+        return self.prefix_cache is not None and \
+            self.allocator.n_free + self.prefix_cache.n_evictable_pages \
+            >= need
+
+    def _plan_paged(self, slot: int, req) -> Optional[Admission]:
+        L = len(req.prompt)
+        total = pages_needed(L + req.max_new_tokens, self.psz)
+        alloc = self.allocator
+        cached_len, run = 0, []
+        if self.prefix_cache is not None:
+            matched, run = self.prefix_cache.lookup(req.prompt)
+            # always prefill >= 1 token: the final prompt position's logits
+            # seed the first decode
+            cached_len = min(matched, max(L - 1, 0))
+        n_full = cached_len // self.psz
+        shared = run[:n_full]
+        cow_src = run[n_full] if cached_len % self.psz else None
+        # pin the reused pages before eviction (below) can touch them
+        alloc.incref(shared)
+        if cow_src is not None:
+            alloc.incref([cow_src])
+        need = total - n_full
+        fresh = alloc.alloc(need)
+        if fresh is None and self._can_reclaim(need):
+            # evict only when it actually covers the shortfall — a futile
+            # eviction would wipe hot prefixes and still leave us blocked
+            self.prefix_cache.evict(need - alloc.n_free)
+            fresh = alloc.alloc(need)
+        if fresh is None and (shared or cow_src is not None):
+            # Prefix reuse itself can block admission: the pins above make
+            # the matched run unevictable, and the leftover fresh-page need
+            # may exceed what eviction can reclaim — forever, if no other
+            # slot is in flight.  Degrade to a cold prefill: drop the pins
+            # (the run becomes evictable), reclaim, take the budget fresh.
+            alloc.decref(shared)
+            if cow_src is not None:
+                alloc.decref([cow_src])
+            shared, cow_src, cached_len, n_full = [], None, 0, 0
+            need = total
+            if alloc.n_free < need and self._can_reclaim(need):
+                self.prefix_cache.evict(need - alloc.n_free)
+            fresh = alloc.alloc(need)
+        if fresh is None:           # roll the pins back; FCFS head blocks
+            alloc.decref(shared)
+            if cow_src is not None:
+                alloc.decref([cow_src])
+            return None
+        # count stats on admission only — a blocked head-of-line request is
+        # re-planned every tick and must not inflate the hit rate
+        if self.stats is not None and self.prefix_cache is not None:
+            self.stats.prefix_lookups += 1
+            self.stats.prefix_hits += cached_len > 0
+        # fresh[0] sits at block-table index n_full: exactly where the COW
+        # copy of the partial page belongs
+        cow = (cow_src, fresh[0]) if cow_src is not None else None
+        return Admission(slot=slot, req=req, pages=shared + fresh,
+                         cached_len=cached_len, cow=cow)
+
+    # ------------------------------------------------------------- events
+    def on_cow_done(self, adm: Admission) -> None:
+        self.allocator.decref([adm.cow[0]])
+
+    def on_prefill_complete(self, adm: Admission) -> None:
+        if self.prefix_cache is None:
+            return
+        L = len(adm.req.prompt)
+        n_full = L // self.psz      # the partial tail page stays private
+        if n_full:
+            self.prefix_cache.insert(adm.req.prompt[:n_full * self.psz],
+                                     adm.pages[:n_full])
+
+    def on_finish(self, adm: Admission) -> None:
+        if self.paged:
+            self.allocator.decref(adm.pages)

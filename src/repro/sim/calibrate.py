@@ -15,7 +15,6 @@ Writes the best-fit constants report; the chosen values are frozen in
 from __future__ import annotations
 
 import itertools
-import json
 
 import numpy as np
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
 
 from repro.sim.siracusa import SiracusaConfig, kernel_efficiency
 from repro.sim.workload import BlockWorkload

@@ -2,15 +2,14 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint.manager import AsyncCheckpointer, CheckpointManager
-from repro.checkpoint.resharding import reshard_params, unshard_param
+from repro.checkpoint.resharding import reshard_params
 from repro.configs import get_config, reduced
 from repro.core import model, steps
-from repro.core.partition import ShardingPlan, model_layout
+from repro.core.partition import ShardingPlan
 
 
 def _assert_tree_equal(a, b):

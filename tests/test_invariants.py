@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) on the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,10 +6,10 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import collectives as cc
-from repro.core.partition import dim_layout, head_layout
-from repro.sim.simulator import hierarchical_allreduce_time
-from repro.sim.siracusa import SiracusaConfig
+from repro.core import collectives as cc  # noqa: E402
+from repro.core.partition import dim_layout, head_layout  # noqa: E402
+from repro.sim.simulator import hierarchical_allreduce_time  # noqa: E402
+from repro.sim.siracusa import SiracusaConfig  # noqa: E402
 
 
 # --- paper contract: wire-cost model ---------------------------------------
@@ -70,7 +69,7 @@ def test_dim_layout_roundtrip(n, tp):
 @settings(max_examples=5, deadline=None)
 def test_compression_error_feedback_bounded(seed):
     """int8 EF quantization error is bounded by one quantization step."""
-    from repro.optim.compression import BLOCK, _dequantize
+    from repro.optim.compression import BLOCK
     rng = np.random.RandomState(seed)
     x = jnp.asarray(rng.randn(1000) * rng.uniform(0.1, 10), jnp.float32)
     flat = np.asarray(x)

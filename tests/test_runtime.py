@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, reduced
+from repro.configs import get_config
 
 
 def test_offload_executor_matches_resident():

@@ -6,8 +6,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.serving.sampler import SamplerConfig, merged_topk_sample, \
-    sample_from_logits
+from repro.serving.sampler import (  # noqa: E402
+    SamplerConfig, merged_topk_sample, sample_from_logits)
 
 
 def test_greedy_ignores_vocab_padding():
