@@ -1,0 +1,121 @@
+"""Bench regression gate: compare a fresh BENCH_*.json against history.
+
+Appends the current payload to a JSONL history file (persisted across CI
+runs via actions/cache; see .github/workflows/ci.yml) and compares each
+mode's key metrics against the median of prior runs.  Warn-only until
+``--min-history`` prior runs exist — perf history has to accumulate before
+gating is meaningful — then a regression beyond ``--tol`` fails the job.
+
+    python benchmarks/check_regression.py BENCH_serving.json \
+        --history .bench-history/serving.jsonl
+
+Stdlib-only on purpose: it must run before (or without) the jax install.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+
+# metric -> direction: +1 = higher is better, -1 = lower is better
+METRICS = {
+    "tokens_per_s": +1,
+    "ttft_p50_ms": -1,
+    "ttft_p99_ms_high": -1,   # QoS headline of the priority scenario
+}
+
+
+def load_history(path):
+    """-> list of prior payloads (oldest first); [] when no file yet."""
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+MAX_HISTORY = 20
+
+
+def append_history(path, payload, prior):
+    """Append and window to the last MAX_HISTORY payloads, so a stale
+    machine profile can't pin the median forever."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    kept = (prior + [payload])[-MAX_HISTORY:]
+    with open(path, "w") as f:
+        for p in kept:
+            f.write(json.dumps(p) + "\n")
+
+
+def compare(current_rows, history, tol, min_history=3):
+    """-> (failures, warnings): regression messages per mode/metric.
+
+    Each mode/metric is compared against the median of that metric over the
+    prior payloads that report it; modes or metrics absent from history are
+    skipped (new benches never fail on their first appearance).  A
+    violation gates (failure) only once that mode/metric has at least
+    ``min_history`` prior samples — a newly added mode is warn-only until
+    its own history accumulates, regardless of how old the file is."""
+    failures, warnings = [], []
+    for row in current_rows:
+        mode = row.get("mode")
+        for metric, sign in METRICS.items():
+            if metric not in row:
+                continue
+            prior = [r[metric] for p in history for r in p.get("rows", [])
+                     if r.get("mode") == mode and metric in r]
+            if not prior:
+                continue
+            med = statistics.median(prior)
+            cur = row[metric]
+            if med <= 0:
+                continue
+            if (sign > 0 and cur < med * (1 - tol)) or \
+                    (sign < 0 and cur > med * (1 + tol)):
+                msg = (f"{mode}/{metric}: {cur:.4g} is {cur / med:.2f}x the "
+                       f"median of {len(prior)} prior runs ({med:.4g})")
+                (failures if len(prior) >= min_history
+                 else warnings).append(msg)
+    return failures, warnings
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json", help="fresh BENCH_*.json to check")
+    ap.add_argument("--history", required=True,
+                    help="JSONL file of prior payloads (appended to)")
+    ap.add_argument("--min-history", type=int, default=3,
+                    help="prior samples of a mode/metric required before "
+                         "its regressions fail (below this: warn-only)")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="fractional slack before a delta counts "
+                         "(CI runners are noisy; default 50%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.bench_json) as f:
+        payload = json.load(f)
+    history = load_history(args.history)
+    failures, warnings = compare(payload.get("rows", []), history, args.tol,
+                                 args.min_history)
+    # failing runs never enter history: a real regression must not
+    # re-baseline itself after a few red runs
+    if not failures:
+        append_history(args.history, payload, history)
+    # ::warning::/::error:: render as GitHub Actions annotations
+    for v in failures:
+        print(f"::error::bench regression: {v}")
+    for v in warnings:
+        print(f"::warning::bench regression (warn-only, thin history): {v}")
+    if not failures and not warnings:
+        print(f"bench OK vs {len(history)} prior run(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,18 @@
-"""Serving throughput bench: contiguous vs paged vs paged+prefix-cache.
+"""Serving throughput bench: contiguous vs paged vs paged+prefix-cache,
+plus a mixed-priority QoS scenario (FCFS vs preemptive priority).
 
 Drives the full ServingEngine on a shared-system-prompt workload (every
 request = common prefix + unique suffix — the traffic shape the radix
 prefix cache targets) and reports tokens/s, TTFT, and prefix-cache
 effectiveness (prefill tokens skipped, hit rate, COW copies).
+
+The priority scenario saturates the slots with low-priority bulk
+requests, lands a high-priority burst mid-run, and reports p50/p99 TTFT
+per class under FCFS vs ``PriorityScheduler(preemption=True)`` — the
+paper's interactive-wearable case, where sensor-triggered queries must
+not queue behind bulk work.  Greedy low-priority outputs are asserted
+token-identical across the two policies (preempted-and-resumed requests
+produce exactly the uncontended continuation).
 
     PYTHONPATH=src python benchmarks/serving_bench.py --smoke --json \
         BENCH_serving.json
@@ -42,6 +51,24 @@ def build_requests(sz, vocab, seed=0):
     return out
 
 
+def _stats_row(mode, eng, stats, dt, n_requests):
+    """The per-mode result row every scenario shares."""
+    row = {"mode": mode,
+           "requests": n_requests,
+           "decoded_tokens": stats.decoded_tokens,
+           "tokens_per_s": stats.decoded_tokens / dt,
+           "ttft_p50_ms": float(np.median(stats.ttft_s)) * 1e3,
+           "ttft_p95_ms": float(np.percentile(stats.ttft_s, 95)) * 1e3,
+           "tpot_p50_ms": float(np.median(stats.tpot_s)) * 1e3,
+           "prefill_tokens_skipped": stats.prefill_tokens_skipped,
+           "prefix_hit_rate": stats.prefix_hit_rate,
+           "cow_copies": stats.cow_copies,
+           "wall_s": dt}
+    if eng.allocator is not None:
+        row["pages_allocated"] = eng.allocator.total_allocated
+    return row
+
+
 def run_mode(mode, cfg, plan, mesh, params, sz):
     import jax
     from repro.configs.base import ShapeConfig
@@ -67,24 +94,70 @@ def run_mode(mode, cfg, plan, mesh, params, sz):
     stats = eng.run(max_ticks=50_000)
     dt = time.perf_counter() - t0
     assert all(r.done for r in reqs)
-    row = {"mode": mode,
-           "requests": sz["requests"],
-           "decoded_tokens": stats.decoded_tokens,
-           "tokens_per_s": stats.decoded_tokens / dt,
-           "ttft_p50_ms": float(np.median(stats.ttft_s)) * 1e3,
-           "ttft_p95_ms": float(np.percentile(stats.ttft_s, 95)) * 1e3,
-           "tpot_p50_ms": float(np.median(stats.tpot_s)) * 1e3,
-           "prefill_tokens_skipped": stats.prefill_tokens_skipped,
-           "prefix_hit_rate": stats.prefix_hit_rate,
-           "cow_copies": stats.cow_copies,
-           "wall_s": dt}
-    if eng.allocator is not None:
-        row["pages_allocated"] = eng.allocator.total_allocated
+    row = _stats_row(mode, eng, stats, dt, sz["requests"])
     if mode == "prefix":
         # the whole point of the mode: the shared prefix is never recomputed
         assert stats.prefill_tokens_skipped > 0, \
             "prefix mode skipped no prefill tokens on a shared-prefix workload"
     return row
+
+
+def run_priority_mode(mode, cfg, plan, mesh, params, sz):
+    """Mixed-priority scenario: low-priority bulk saturates the slots, a
+    high-priority burst lands mid-run.  mode: 'prio-fcfs' (baseline) or
+    'prio-preempt' (PriorityScheduler with preemption).  -> (row, outputs)
+    where outputs maps rid -> generated tokens (for cross-mode identity)."""
+    import functools
+    from repro.serving import PriorityScheduler, Request, ServingEngine
+
+    scheduler = None
+    if mode == "prio-preempt":
+        scheduler = functools.partial(PriorityScheduler, preemption=True)
+    # double-occupancy pool: enough slack that pages donated by preempted
+    # requests survive (un-evicted) until the victims resume behind the
+    # backlog — the KV-reuse signal this scenario reports
+    n_pages = 2 * sz["slots"] * (sz["seq_budget"] // sz["page_size"]) + 1
+    eng = ServingEngine.build_paged(
+        cfg, plan, mesh, sz["slots"], sz["seq_budget"], params,
+        page_size=sz["page_size"], prefill_chunk=sz["chunk"],
+        n_pages=n_pages, prefix_cache=True, scheduler=scheduler)
+    rng = np.random.RandomState(1)
+    vocab = cfg.vocab_size
+    low = [Request(rid=rid,
+                   prompt=rng.randint(2, vocab, sz["prefix"]).astype(np.int32),
+                   max_new_tokens=sz["max_new"], priority=0)
+           for rid in range(sz["requests"])]
+    high = [Request(rid=1000 + i,
+                    prompt=rng.randint(2, vocab,
+                                       sz["suffix"]).astype(np.int32),
+                    max_new_tokens=sz["max_new"], priority=10)
+            for i in range(max(2, sz["requests"] // 4))]
+    for r in low:
+        eng.submit(r)
+    # land the burst once the first wave of prefills is decoding
+    burst_at = -(-sz["prefix"] // sz["chunk"]) + 2
+    t0 = time.perf_counter()
+    tick = 0
+    while eng.sched.has_pending() or \
+            any(a is not None for a in eng.admissions):
+        if tick == burst_at:
+            for r in high:
+                eng.submit(r)
+        eng.tick()
+        tick += 1
+        assert tick < 50_000, "priority scenario did not converge"
+    dt = time.perf_counter() - t0
+    stats = eng.stats
+    assert all(r.done for r in low + high)
+    ttft = {cls: [stats.request_ttft[r.rid] for r in rs]
+            for cls, rs in (("high", high), ("low", low))}
+    row = _stats_row(mode, eng, stats, dt, len(low) + len(high))
+    row["preemptions"] = stats.preemptions
+    for cls in ("high", "low"):
+        row[f"ttft_p50_ms_{cls}"] = float(np.median(ttft[cls])) * 1e3
+        row[f"ttft_p99_ms_{cls}"] = float(np.percentile(ttft[cls], 99)) * 1e3
+    outputs = {r.rid: tuple(r.out_tokens) for r in low + high}
+    return row, outputs
 
 
 def rows(smoke: bool = False):
@@ -100,8 +173,33 @@ def rows(smoke: bool = False):
     mesh = compat.make_mesh((1, 1), ("data", "model"),
                             devices=jax.devices()[:1])
     params = model.init_params(cfg, plan)
-    return [run_mode(m, cfg, plan, mesh, params, sz)
-            for m in ("contiguous", "paged", "prefix")]
+    out = [run_mode(m, cfg, plan, mesh, params, sz)
+           for m in ("contiguous", "paged", "prefix")]
+    fcfs_row, fcfs_out = run_priority_mode("prio-fcfs", cfg, plan, mesh,
+                                           params, sz)
+    pre_row, pre_out = run_priority_mode("prio-preempt", cfg, plan, mesh,
+                                         params, sz)
+    # schedule-invariance: greedy outputs are identical under both policies
+    # even though prio-preempt evicted and resumed low-priority requests
+    assert fcfs_out == pre_out, "outputs changed under preemptive scheduling"
+    speedup = fcfs_row["ttft_p99_ms_high"] / max(pre_row["ttft_p99_ms_high"],
+                                                 1e-9)
+    print(f"# high-priority p99 TTFT: fcfs={fcfs_row['ttft_p99_ms_high']:.1f}"
+          f"ms preempt={pre_row['ttft_p99_ms_high']:.1f}ms "
+          f"({speedup:.1f}x, {pre_row['preemptions']} preemptions)")
+    # the QoS point of the policy: urgent arrivals must not queue behind
+    # bulk work (observed ~8-10x; 2x leaves slack for noise).  Smoke-shape
+    # TTFTs are single-digit ms over ~2 samples, so on shared CI runners
+    # one scheduler stall could flake the ratio — warn there and leave the
+    # trend to check_regression; full mode asserts hard.
+    if speedup < 2.0:
+        msg = f"priority preemption gained only {speedup:.2f}x (< 2x)"
+        assert smoke, msg
+        print(f"::warning::{msg} — smoke wall-clock noise?")
+    assert pre_row["preemptions"] > 0
+    # ...and the victims' KV was reused on resume, not recomputed
+    assert pre_row["prefill_tokens_skipped"] > 0
+    return out + [fcfs_row, pre_row]
 
 
 def main(smoke=False, json_path=None):

@@ -6,10 +6,18 @@
 Builds the prefill/decode steps for a host mesh, spins up the
 continuous-batching engine, pushes synthetic requests, and reports
 TTFT / per-token latency / throughput.
+
+Scheduling policy is selected with ``--policy {fcfs,priority,fair}``;
+``--policy priority --preemption`` additionally evicts low-priority slots
+when urgent requests arrive (paged engine only; see README §Serving).
+``--high-priority-every N`` marks every Nth request urgent and the report
+then splits TTFT per class; ``--clients N`` spreads requests across N
+client ids for the fair policy.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import sys
 import time
 
@@ -40,10 +48,24 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common system-prompt prefix of this "
                          "many tokens to every request")
+    ap.add_argument("--policy", choices=("fcfs", "priority", "fair"),
+                    default="fcfs", help="admission policy (serving.policies)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="evict low-priority slots for urgent arrivals "
+                         "(requires --policy priority and a paged engine)")
+    ap.add_argument("--high-priority-every", type=int, default=0,
+                    metavar="N", help="every Nth request gets priority 10 "
+                                      "(0 = uniform priority)")
+    ap.add_argument("--clients", type=int, default=1,
+                    help="spread requests over N client ids (fair policy)")
     args = ap.parse_args(argv)
     if args.shared_prefix + args.prompt_len + args.max_new > args.seq_budget:
         ap.error("--shared-prefix + --prompt-len + --max-new must fit "
                  "--seq-budget")
+    if args.preemption and args.policy != "priority":
+        ap.error("--preemption requires --policy priority")
+    if args.preemption and not (args.paged or args.prefix_cache):
+        ap.error("--preemption requires the paged engine (--paged)")
 
     import jax
     from repro.configs import get_config, reduced
@@ -51,7 +73,8 @@ def main(argv=None):
     from repro.core import model, steps
     from repro.core.partition import ShardingPlan
     from repro.launch.mesh import host_mesh
-    from repro.serving import Request, SamplerConfig, ServingEngine
+    from repro.serving import (FairScheduler, PriorityScheduler, Request,
+                               SamplerConfig, ServingEngine)
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -60,13 +83,21 @@ def main(argv=None):
     mesh = host_mesh(tp=args.tp, dp=1)
     params = model.init_params(cfg, plan, seed=args.seed)
 
+    scheduler = None                 # engine default: FCFS
+    if args.policy == "priority":
+        scheduler = functools.partial(PriorityScheduler,
+                                      preemption=args.preemption)
+    elif args.policy == "fair":
+        scheduler = FairScheduler
+
     sampler = SamplerConfig(temperature=args.temperature, top_k=40)
     if args.paged or args.prefix_cache:
         engine = ServingEngine.build_paged(
             cfg, plan, mesh, args.slots, args.seq_budget, params,
             page_size=args.page_size, n_pages=args.n_pages,
             prefill_chunk=args.prefill_chunk, sampler=sampler,
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache, scheduler=scheduler,
+            rng_seed=args.seed)
     else:
         dshape = ShapeConfig("serve", "decode", args.seq_budget, args.slots)
         pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
@@ -74,22 +105,29 @@ def main(argv=None):
         prefill_fn, _, _ = steps.make_prefill_step(cfg, plan, mesh, pshape)
         engine = ServingEngine(cfg, plan, mesh, args.slots, args.seq_budget,
                                params, jax.jit(prefill_fn),
-                               jax.jit(decode_fn), sampler=sampler)
+                               jax.jit(decode_fn), sampler=sampler,
+                               scheduler=scheduler, rng_seed=args.seed)
     rng = np.random.RandomState(args.seed)
     shared = rng.randint(2, cfg.vocab_size,
                          args.shared_prefix).astype(np.int32)
+    reqs = []
     t0 = time.time()
     for rid in range(args.requests):
         prompt = rng.randint(2, cfg.vocab_size,
                              rng.randint(4, args.prompt_len + 1)
                              ).astype(np.int32)
         prompt = np.concatenate([shared, prompt]).astype(np.int32)
-        engine.submit(Request(rid=rid, prompt=prompt,
-                              max_new_tokens=args.max_new))
+        hi = args.high_priority_every and rid % args.high_priority_every == 0
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new,
+                      priority=10 if hi else 0,
+                      client_id=rid % max(args.clients, 1))
+        reqs.append(req)
+        engine.submit(req)
     stats = engine.run()
     dt = time.time() - t0
     print(f"requests={args.requests} ticks={stats.ticks} "
-          f"prefills={stats.prefills} tokens={stats.decoded_tokens}")
+          f"prefills={stats.prefills} tokens={stats.decoded_tokens} "
+          f"preemptions={stats.preemptions}")
     if stats.ttft_s:
         print(f"throughput={stats.decoded_tokens / dt:.1f} tok/s "
               f"ttft_p50={np.median(stats.ttft_s) * 1e3:.1f}ms "
@@ -97,6 +135,14 @@ def main(argv=None):
               f"tpot_p50={np.median(stats.tpot_s) * 1e3:.1f}ms")
     else:
         print("no tokens emitted")
+    if args.high_priority_every:
+        for label, cls in (("high", 10), ("low", 0)):
+            ts = [stats.request_ttft[r.rid] for r in reqs
+                  if r.priority == cls and r.rid in stats.request_ttft]
+            if ts:
+                print(f"ttft[{label}]: p50={np.median(ts) * 1e3:.1f}ms "
+                      f"p99={np.percentile(ts, 99) * 1e3:.1f}ms "
+                      f"n={len(ts)}")
     if args.prefix_cache:
         print(f"prefix_cache: hit_rate={stats.prefix_hit_rate:.2f} "
               f"({stats.prefix_hits}/{stats.prefix_lookups} lookups) "

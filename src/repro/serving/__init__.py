@@ -1,4 +1,5 @@
 from repro.serving.engine import EngineStats, Request, ServingEngine  # noqa: F401
+from repro.serving.policies import FairScheduler, PriorityScheduler  # noqa: F401
 from repro.serving.prefix_cache import RadixPrefixCache  # noqa: F401
 from repro.serving.sampler import SamplerConfig, sample_from_logits  # noqa: F401
 from repro.serving.scheduler import Admission, FCFSScheduler, Scheduler  # noqa: F401

@@ -8,9 +8,10 @@ EOS/length-complete slots free up and are refilled from the queue.
 
 The engine is pure **mechanism**: it owns the device-side state (KV pool,
 block tables, positions) and executes step functions.  All **policy** —
-admission order, page budgeting, prefix reuse, eviction — lives in
-``serving.scheduler`` behind the ``Scheduler`` interface; the engine
-executes the scheduler's ``Admission`` decisions and reports lifecycle
+admission order, page budgeting, prefix reuse, eviction, preemption
+victim choice — lives in ``serving.scheduler`` / ``serving.policies``
+behind the ``Scheduler`` interface; the engine executes the scheduler's
+``Admission`` decisions (and preemption verdicts) and reports lifecycle
 events back.
 
 Two cache disciplines, selected by the ``paged`` flag:
@@ -29,6 +30,10 @@ Two cache disciplines, selected by the ``paged`` flag:
   token, copying partially-shared pages copy-on-write
   (``serving.prefix_cache``).
 
+Sampling is schedule-invariant: every request draws from its own seeded
+RNG stream (``Request.rng``), so non-greedy outputs do not depend on
+admission order, batch composition, or preemption points.
+
 The engine is mesh-agnostic: it drives whatever step functions
 ``core.steps`` built — 1-device CPU smoke or a full pod.
 """
@@ -45,7 +50,8 @@ import numpy as np
 from repro.core.kvcache import SCRATCH_PAGE, PageAllocator
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampler import SamplerConfig, sample_from_logits
-from repro.serving.scheduler import Admission, FCFSScheduler
+from repro.serving.scheduler import (Admission, FCFSScheduler, Scheduler,
+                                     effective_prompt)
 
 
 @dataclass
@@ -53,6 +59,10 @@ class Request:
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 32
+    priority: int = 0                  # higher = more urgent (policies.py)
+    client_id: int = 0                 # fairness accounting key (policies.py)
+    seed: Optional[int] = None         # sampling stream seed (default: rid)
+    rng: Optional[np.random.RandomState] = None   # set at submit
     out_tokens: list = field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
@@ -67,6 +77,7 @@ class EngineStats:
     decoded_tokens: int = 0
     prefill_tokens_skipped: int = 0    # prompt tokens served from the cache
     cow_copies: int = 0
+    preemptions: int = 0
     prefix_lookups: int = 0
     prefix_hits: int = 0
     tpot_s: list = field(default_factory=list)
@@ -89,7 +100,8 @@ class ServingEngine:
                  sampler: Optional[SamplerConfig] = None, *,
                  paged: bool = False, page_size: int = 16,
                  n_pages: int = 0, prefill_chunk: int = 0,
-                 prefix_cache: bool = False, scheduler=None):
+                 prefix_cache: bool = False, scheduler=None,
+                 rng_seed: int = 0):
         from repro.core import steps as _steps
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
         self.B, self.S = batch_slots, seq_budget
@@ -127,19 +139,26 @@ class ServingEngine:
             assert not prefix_cache, "prefix cache requires the paged engine"
             self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
                                                seq_budget)
-        self.sched = scheduler or FCFSScheduler(
-            seq_budget=seq_budget, allocator=self.allocator,
-            page_size=page_size if paged else 0,
-            prefix_cache=self.prefix_cache, stats=self.stats)
+        # ``scheduler`` is either a ready instance or a factory (a Scheduler
+        # subclass / functools.partial): factories receive the engine-owned
+        # shared state, so callers can pass e.g. ``PriorityScheduler``
+        # without pre-building the allocator themselves.
+        sched = scheduler or FCFSScheduler
+        if not isinstance(sched, Scheduler):
+            sched = sched(seq_budget=seq_budget, allocator=self.allocator,
+                          page_size=page_size if paged else 0,
+                          prefix_cache=self.prefix_cache, stats=self.stats)
+        self.sched = sched
         self._rids: set = set()
-        self._rng = np.random.RandomState(0)
+        self.rng_seed = rng_seed
 
     @classmethod
     def build_paged(cls, cfg, plan, mesh, batch_slots: int, seq_budget: int,
                     params, *, page_size: int = 16, n_pages: int = 0,
                     prefill_chunk: int = 16, eos_id: int = 1,
                     sampler: Optional[SamplerConfig] = None,
-                    prefix_cache: bool = False, scheduler=None):
+                    prefix_cache: bool = False, scheduler=None,
+                    rng_seed: int = 0):
         """Construct a paged engine, compiling its (chunk, decode) pair.
 
         ``n_pages`` defaults to full occupancy (every slot at budget) plus
@@ -156,7 +175,8 @@ class ServingEngine:
                    jax.jit(chunk_fn), jax.jit(dec), eos_id=eos_id,
                    sampler=sampler, paged=True, page_size=page_size,
                    n_pages=n_pages, prefill_chunk=prefill_chunk,
-                   prefix_cache=prefix_cache, scheduler=scheduler)
+                   prefix_cache=prefix_cache, scheduler=scheduler,
+                   rng_seed=rng_seed)
 
     # ------------------------------------------------------------------ API
     @property
@@ -169,6 +189,11 @@ class ServingEngine:
             raise RuntimeError(f"duplicate request id {req.rid}")
         self.sched.submit(req)        # raises on infeasible requests
         self._rids.add(req.rid)
+        if req.rng is None:
+            # one private stream per request: sampled outputs depend only on
+            # (engine seed, request seed), never on scheduling
+            seed = req.seed if req.seed is not None else req.rid
+            req.rng = np.random.RandomState([self.rng_seed, seed])
         req.t_submit = time.monotonic()
 
     def run(self, max_ticks: int = 10_000):
@@ -177,6 +202,49 @@ class ServingEngine:
                 self.stats.ticks < max_ticks:
             self.tick()
         return self.stats
+
+    def drain(self) -> int:
+        """Abort every in-flight admission (e.g. after ``run`` exhausted
+        ``max_ticks``): each is routed through ``sched.on_finish`` so its
+        pages return to the pool — no leaked refcounts.  Aborted requests
+        keep ``done=False``; queued-but-never-admitted requests hold no
+        resources and stay queued.  -> number of slots drained."""
+        n = 0
+        for b in range(self.B):
+            adm = self.admissions[b]
+            if adm is None:
+                continue
+            self.sched.on_finish(adm)
+            self._clear_slot(b)
+            n += 1
+        return n
+
+    def preempt(self, b: int):
+        """Evict slot ``b`` mid-flight.  The slot's progress needs no
+        explicit snapshot: emitted tokens already live on
+        ``req.out_tokens``, and resume re-admits over the *effective
+        prompt* (prompt + emitted tokens), so ``pos``/``prefill_done``
+        are reconstructed by ordinary admission.  The resident full pages
+        are donated to the prefix cache via ``sched.on_preempt`` — resume
+        finds them as a prefix hit and the victim's KV is reused, not
+        recomputed (only the partial tail page is re-prefilled)."""
+        assert self.paged, "preemption requires the paged engine"
+        adm = self.admissions[b]
+        assert adm is not None, f"slot {b} is idle"
+        n = int(self.prefill_done[b]) if self.slot_state[b] == "prefill" \
+            else int(self.pos[b])
+        resident = effective_prompt(adm.req)[:n]
+        self.sched.on_preempt(adm, resident)
+        self._clear_slot(b)
+        self.stats.preemptions += 1
+
+    def _clear_slot(self, b: int):
+        self.admissions[b] = None
+        self.pos[b] = 0
+        self.last_token[b] = 0
+        if self.paged:
+            self.slot_state[b] = None
+            self.prefill_done[b] = 0
 
     # ----------------------------------------------------------------- tick
     def tick(self):
@@ -191,22 +259,30 @@ class ServingEngine:
                 jnp.asarray(self.last_token[:, None]),
                 jnp.asarray(self.pos))
         logits = np.asarray(jax.device_get(logits)).astype(np.float32)
-        toks = sample_from_logits(logits, self.sampler,
-                                  self.cfg.vocab_size, self._rng)
         now = time.monotonic()
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
-            self._emit(b, req, int(toks[b]), now)
+            self.pos[b] += 1        # the decode step wrote last_token's KV
+            self._emit(b, req, self._sample_row(logits, b, req), now)
         self.stats.ticks += 1
 
+    def _sample_row(self, logits: np.ndarray, b: int, req: Request) -> int:
+        """Sample row b from the request's own stream (schedule-invariant)."""
+        return int(sample_from_logits(logits[b:b + 1], self.sampler,
+                                      self.cfg.vocab_size, req.rng)[0])
+
     def _emit(self, b: int, req: Request, tok: int, now: float):
-        """Record one decoded token for slot b; retire the slot when done."""
+        """Record one generated token for slot b; retire the slot when done.
+
+        The caller owns ``pos``: decode ticks advance it past the KV they
+        just wrote before emitting; prefill completion leaves it at the
+        prompt length (the sampled token's KV is written by the next decode
+        tick)."""
         if not req.out_tokens:
             req.t_first_token = now
             self.stats.request_ttft[req.rid] = now - req.t_submit
         req.out_tokens.append(tok)
-        self.pos[b] += 1
         self.last_token[b] = tok
         self.stats.decoded_tokens += 1
         if tok == self.eos or len(req.out_tokens) >= req.max_new_tokens \
@@ -217,15 +293,13 @@ class ServingEngine:
                 (now - req.t_first_token) /
                 max(len(req.out_tokens) - 1, 1))
             self.sched.on_finish(self.admissions[b])
-            self.admissions[b] = None
-            if self.paged:
-                self.slot_state[b] = None
+            self._clear_slot(b)
 
     def _admit(self):
         free = [b for b in range(self.B) if self.admissions[b] is None]
         for adm in self.sched.plan(free):
-            self._prefill_into(adm.slot, adm.req)
             self.admissions[adm.slot] = adm
+            self._prefill_into(adm.slot, adm.req)
 
     def _prefill_into(self, b: int, req: Request):
         """Prefill a single request and splice its cache into lane b."""
@@ -243,14 +317,19 @@ class ServingEngine:
         # splice lane 0 of lane_cache into slot b of the engine cache
         self.cache = _splice_cache(self.cache, lane_cache, b)
         logits = np.asarray(jax.device_get(logits)).astype(np.float32)
-        tok = sample_from_logits(logits, self.sampler, self.cfg.vocab_size,
-                                 self._rng)[0]
+        # the token sampled from the prompt's final logits IS the first
+        # generated token: emit it (TTFT lands at prefill completion, and
+        # max_new_tokens counts it)
         self.pos[b] = S
-        self.last_token[b] = int(tok)
-        req.out_tokens = []
+        self._emit(b, req, self._sample_row(logits, 0, req),
+                   time.monotonic())
 
     # ------------------------------------------------------------ paged tick
     def _tick_paged(self):
+        active = [a for a in self.admissions if a is not None]
+        for adm in self.sched.plan_preemptions(active,
+                                               self.B - len(active)):
+            self.preempt(adm.slot)
         self._admit_paged()
         for b in range(self.B):
             if self.admissions[b] is not None and \
@@ -275,7 +354,8 @@ class ServingEngine:
                 self.sched.on_cow_done(adm)
                 self.stats.cow_copies += 1
             # prefix-cached tokens are already resident: prefill resumes at
-            # the first uncached position
+            # the first uncached position (for a preempted request this is
+            # its donated progress — reused, not recomputed)
             self.prefill_done[b] = adm.cached_len
             self.stats.prefill_tokens_skipped += adm.cached_len
             self.pos[b] = 0
@@ -291,11 +371,12 @@ class ServingEngine:
     def _prefill_chunk(self, b: int):
         """Advance slot b's prefill by one fixed-size chunk."""
         req = self.admissions[b].req
-        L, C = len(req.prompt), self.chunk
+        prompt = effective_prompt(req)     # includes resumed output tokens
+        L, C = len(prompt), self.chunk
         c0 = int(self.prefill_done[b])
         chunk_toks = np.zeros((1, C), np.int32)
         n = min(C, L - c0)
-        chunk_toks[0, :n] = req.prompt[c0:c0 + n]
+        chunk_toks[0, :n] = prompt[c0:c0 + n]
         last_idx = min(L - 1 - c0, C - 1)
         with self.mesh:
             logits, self.cache = self.prefill_fn(
@@ -307,12 +388,15 @@ class ServingEngine:
             self.stats.prefills += 1
             self.sched.on_prefill_complete(self.admissions[b])
             logits = np.asarray(jax.device_get(logits)).astype(np.float32)
-            tok = sample_from_logits(logits, self.sampler,
-                                     self.cfg.vocab_size, self._rng)[0]
+            # emit the token sampled from the final prompt position — the
+            # first generated token (or, on resume, the next one: resumed
+            # requests re-enter here with out_tokens non-empty, so TTFT is
+            # not re-recorded)
             self.pos[b] = L
-            self.last_token[b] = int(tok)
-            req.out_tokens = []
-            self.slot_state[b] = "decode"
+            self._emit(b, req, self._sample_row(logits, 0, req),
+                       time.monotonic())
+            if self.admissions[b] is not None:   # not retired by that token
+                self.slot_state[b] = "decode"
 
     def _decode_tick_paged(self):
         active = [b for b in range(self.B)
@@ -331,11 +415,11 @@ class ServingEngine:
                 jnp.asarray(self.last_token[:, None]),
                 jnp.asarray(pos.astype(np.int32)), jnp.asarray(bt))
         logits = np.asarray(jax.device_get(logits)).astype(np.float32)
-        toks = sample_from_logits(logits, self.sampler,
-                                  self.cfg.vocab_size, self._rng)
         now = time.monotonic()
         for b in active:
-            self._emit(b, self.admissions[b].req, int(toks[b]), now)
+            req = self.admissions[b].req
+            self.pos[b] += 1        # the decode step wrote last_token's KV
+            self._emit(b, req, self._sample_row(logits, b, req), now)
 
 
 def _splice_cache(big, lane, b):

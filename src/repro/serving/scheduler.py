@@ -5,12 +5,28 @@ pool, block tables, positions) and executes step functions.  Everything
 discretionary — admission order, page budgeting, prefix reuse,
 copy-on-write planning, cache eviction, page release — lives here, behind
 the small ``Scheduler`` interface, so priority / fairness / preemptive
-policies can drop in without touching the engine.
+policies can drop in without touching the engine (``serving.policies``
+ships ``PriorityScheduler`` and ``FairScheduler``).
 
 A scheduler communicates decisions as ``Admission`` records; the engine
 executes them (COW page copies, chunked prefill from the first uncached
 token) and reports lifecycle events back (``on_prefill_complete``,
-``on_finish``) for the policy to update its bookkeeping.
+``on_finish``, ``on_preempt``) for the policy to update its bookkeeping.
+
+``FCFSScheduler`` is both the stock policy and the machinery base: all
+paged planning (page budgeting, prefix lookup, COW, eviction, rollback)
+lives in it, and subclasses override only the queue-discipline hooks
+(``_enqueue`` / ``_select_next`` / ``_put_back`` / ``_requeue_preempted``)
+plus, for preemptive policies, ``plan_preemptions``.
+
+Preemption contract: the engine calls ``plan_preemptions`` each tick and
+evicts the returned victims via ``ServingEngine.preempt``, which hands the
+victim's resident tokens to ``on_preempt``.  ``on_preempt`` donates the
+victim's full pages to the radix prefix cache (so resume re-admits as a
+prefix hit and the KV is never recomputed), releases the slot's page refs,
+and re-queues the request.  A resumed request's admission plans over its
+*effective prompt* — original prompt plus the tokens it already generated —
+so the ordinary prefix-hit machinery restores its state.
 """
 from __future__ import annotations
 
@@ -18,7 +34,29 @@ import collections
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+import numpy as np
+
 from repro.core.kvcache import pages_needed
+
+
+def effective_prompt(req) -> np.ndarray:
+    """Tokens a (re-)admission must make resident: the original prompt plus
+    everything the request already generated.  For a fresh request this is
+    just the prompt; a preempted request re-prefills its own output, which
+    the prefix cache turns into a hit on the pages donated at preemption
+    (``on_preempt``) — reuse, not recompute."""
+    out = getattr(req, "out_tokens", None)
+    if not out:
+        return np.asarray(req.prompt, np.int32)
+    return np.concatenate([np.asarray(req.prompt, np.int32),
+                           np.asarray(out, np.int32)])
+
+
+def remaining_new_tokens(req) -> int:
+    """Decode budget still owed to ``req`` (shrinks across preemptions, so
+    effective_prompt + remaining is the constant submit-time budget)."""
+    out = getattr(req, "out_tokens", None)
+    return req.max_new_tokens - (len(out) if out else 0)
 
 
 @dataclass
@@ -29,12 +67,14 @@ class Admission:
     engine).  cached_len: prompt tokens already resident via prefix sharing
     — chunked prefill starts at this offset.  cow: (src, dst) page pair the
     engine must copy before the slot's first write (divergence out of a
-    shared partial page)."""
+    shared partial page).  seq: global admission order stamp (preemptive
+    policies use it to pick the victim with the least sunk work)."""
     slot: int
     req: object
     pages: Optional[List[int]] = None
     cached_len: int = 0
     cow: Optional[Tuple[int, int]] = None
+    seq: int = 0
 
 
 class Scheduler:
@@ -51,6 +91,12 @@ class Scheduler:
         """Admissions for this tick; at most one per free slot."""
         raise NotImplementedError
 
+    def plan_preemptions(self, active: List[Admission],
+                         n_free: int) -> List[Admission]:
+        """Victims to evict this tick (before admission planning).  The
+        engine preempts each returned admission's slot; default: none."""
+        return []
+
     def on_cow_done(self, adm: Admission) -> None:
         """The engine copied adm.cow — release the pin on the source."""
 
@@ -59,6 +105,11 @@ class Scheduler:
 
     def on_finish(self, adm: Admission) -> None:
         """adm's request retired — release its resources."""
+
+    def on_preempt(self, adm: Admission, resident_tokens) -> None:
+        """adm was evicted mid-flight with ``resident_tokens`` computed —
+        salvage its pages and re-queue the request."""
+        raise NotImplementedError
 
 
 class FCFSScheduler(Scheduler):
@@ -79,10 +130,29 @@ class FCFSScheduler(Scheduler):
         self.psz = page_size
         self.prefix_cache = prefix_cache
         self.stats = stats
+        self._round = 0      # logical clock: one tick per plan() call
+        self._adm_seq = 0    # admission order stamp
 
     @property
     def paged(self) -> bool:
         return self.allocator is not None
+
+    # ------------------------------------------------- queue discipline hooks
+    def _enqueue(self, req) -> None:
+        self.queue.append(req)
+
+    def _select_next(self):
+        """Next request to try admitting, or None."""
+        return self.queue.popleft() if self.queue else None
+
+    def _put_back(self, req) -> None:
+        """Selected request could not be admitted (page pressure): it stays
+        head-of-line so nothing overtakes it."""
+        self.queue.appendleft(req)
+
+    def _requeue_preempted(self, req) -> None:
+        """Preempted request returns to the queue; FCFS resumes it first."""
+        self.queue.appendleft(req)
 
     # ------------------------------------------------------------- intake
     def submit(self, req) -> None:
@@ -106,24 +176,28 @@ class FCFSScheduler(Scheduler):
             raise RuntimeError(
                 f"request {req.rid} prompt ({len(req.prompt)} tokens) "
                 f"exceeds the sequence budget {self.seq_budget}")
-        self.queue.append(req)
+        self._enqueue(req)
 
     def has_pending(self) -> bool:
         return bool(self.queue)
 
     # ---------------------------------------------------------- admission
     def plan(self, free_slots: List[int]) -> List[Admission]:
+        self._round += 1
         out = []
         for slot in free_slots:
-            if not self.queue:
+            req = self._select_next()
+            if req is None:
                 break
             if self.paged:
-                adm = self._plan_paged(slot, self.queue[0])
-                if adm is None:     # head-of-line waits for reclamation
+                adm = self._plan_paged(slot, req)
+                if adm is None:     # blocked: wait for reclamation
+                    self._put_back(req)
                     break
             else:
-                adm = Admission(slot=slot, req=self.queue[0])
-            self.queue.popleft()
+                adm = Admission(slot=slot, req=req)
+            adm.seq = self._adm_seq
+            self._adm_seq += 1
             out.append(adm)
         return out
 
@@ -135,12 +209,13 @@ class FCFSScheduler(Scheduler):
             >= need
 
     def _plan_paged(self, slot: int, req) -> Optional[Admission]:
-        L = len(req.prompt)
-        total = pages_needed(L + req.max_new_tokens, self.psz)
+        prompt = effective_prompt(req)
+        L = len(prompt)
+        total = pages_needed(L + remaining_new_tokens(req), self.psz)
         alloc = self.allocator
         cached_len, run = 0, []
         if self.prefix_cache is not None:
-            matched, run = self.prefix_cache.lookup(req.prompt)
+            matched, run = self.prefix_cache.lookup(prompt)
             # always prefill >= 1 token: the final prompt position's logits
             # seed the first decode
             cached_len = min(matched, max(L - 1, 0))
@@ -172,7 +247,7 @@ class FCFSScheduler(Scheduler):
             if alloc.n_free < need and self._can_reclaim(need):
                 self.prefix_cache.evict(need - alloc.n_free)
             fresh = alloc.alloc(need)
-        if fresh is None:           # roll the pins back; FCFS head blocks
+        if fresh is None:           # roll the pins back; the head blocks
             alloc.decref(shared)
             if cow_src is not None:
                 alloc.decref([cow_src])
@@ -195,12 +270,28 @@ class FCFSScheduler(Scheduler):
     def on_prefill_complete(self, adm: Admission) -> None:
         if self.prefix_cache is None:
             return
-        L = len(adm.req.prompt)
-        n_full = L // self.psz      # the partial tail page stays private
+        prompt = effective_prompt(adm.req)
+        n_full = len(prompt) // self.psz    # the partial tail stays private
         if n_full:
-            self.prefix_cache.insert(adm.req.prompt[:n_full * self.psz],
+            self.prefix_cache.insert(prompt[:n_full * self.psz],
                                      adm.pages[:n_full])
 
     def on_finish(self, adm: Admission) -> None:
         if self.paged:
             self.allocator.decref(adm.pages)
+
+    def on_preempt(self, adm: Admission, resident_tokens) -> None:
+        """Salvage an evicted slot: donate its resident *full* pages to the
+        prefix cache (resume finds them as a prefix hit — the victim's KV
+        is reused, never recomputed), drop the slot's page refs, and
+        re-queue the request.  The partial tail page is slot-private KV and
+        is simply freed; resume re-prefills those few tokens."""
+        if self.paged:
+            if self.prefix_cache is not None:
+                n_full = len(resident_tokens) // self.psz
+                if n_full:
+                    self.prefix_cache.insert(
+                        resident_tokens[:n_full * self.psz],
+                        adm.pages[:n_full])
+            self.allocator.decref(adm.pages)
+        self._requeue_preempted(adm.req)

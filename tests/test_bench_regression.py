@@ -1,0 +1,86 @@
+"""Bench regression gate (benchmarks/check_regression.py): warn-only
+while history is thin, fail on real regressions once it isn't."""
+import importlib.util
+import json
+import pathlib
+
+
+def _load_mod():
+    path = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" / \
+        "check_regression.py"
+    spec = importlib.util.spec_from_file_location("check_regression", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _payload(tps, ttft, mode="paged"):
+    return {"bench": "serving",
+            "rows": [{"mode": mode, "tokens_per_s": tps,
+                      "ttft_p50_ms": ttft}]}
+
+
+def _run(mod, tmp_path, payload, hist, n):
+    cur = tmp_path / f"cur{n}.json"
+    cur.write_text(json.dumps(payload))
+    return mod.main([str(cur), "--history", str(hist)])
+
+
+def test_warn_only_then_gate(tmp_path):
+    mod = _load_mod()
+    hist = tmp_path / "hist" / "serving.jsonl"
+    # runs 1-3: no/thin history -> always exit 0, even on a wild swing
+    assert _run(mod, tmp_path, _payload(100.0, 10.0), hist, 1) == 0
+    assert _run(mod, tmp_path, _payload(10.0, 100.0), hist, 2) == 0
+    assert _run(mod, tmp_path, _payload(100.0, 10.0), hist, 3) == 0
+    # run 4: >= 3 prior runs; healthy numbers near the median pass
+    assert _run(mod, tmp_path, _payload(95.0, 11.0), hist, 4) == 0
+    # run 5: throughput collapse beyond the 50% tolerance fails
+    assert _run(mod, tmp_path, _payload(20.0, 10.0), hist, 5) == 1
+    # run 6: TTFT blow-up fails too
+    assert _run(mod, tmp_path, _payload(100.0, 80.0), hist, 6) == 1
+    # failing runs never entered history (no self-rebaselining): only the
+    # four passing runs are on file
+    assert len(hist.read_text().strip().splitlines()) == 4
+    # retrying the same regression keeps failing rather than converging
+    assert _run(mod, tmp_path, _payload(20.0, 10.0), hist, 7) == 1
+
+
+def test_history_is_windowed(tmp_path):
+    mod = _load_mod()
+    hist = tmp_path / "serving.jsonl"
+    for n in range(25):
+        assert _run(mod, tmp_path, _payload(100.0, 10.0), hist, n) == 0
+    assert len(hist.read_text().strip().splitlines()) == mod.MAX_HISTORY
+
+
+def test_new_modes_gate_on_their_own_history(tmp_path):
+    mod = _load_mod()
+    hist = tmp_path / "serving.jsonl"
+    for n in range(4):
+        assert _run(mod, tmp_path, _payload(100.0, 10.0), hist, n) == 0
+    # a mode history has never seen is skipped, not failed
+    assert _run(mod, tmp_path, _payload(50.0, 999.0, mode="prio"),
+                hist, 10) == 0
+    # ...and with only 1-2 prior samples OF THAT MODE, a swing stays
+    # warn-only even though the file itself has plenty of payloads
+    assert _run(mod, tmp_path, _payload(5.0, 10.0, mode="prio"),
+                hist, 11) == 0
+    assert _run(mod, tmp_path, _payload(50.0, 10.0, mode="prio"),
+                hist, 12) == 0
+    # at 3 prior samples the mode gates like any other
+    assert _run(mod, tmp_path, _payload(5.0, 10.0, mode="prio"),
+                hist, 13) == 1
+
+
+def test_compare_directionality():
+    mod = _load_mod()
+    history = [_payload(100.0, 10.0) for _ in range(3)]
+    # improvements never violate
+    assert mod.compare(_payload(200.0, 5.0)["rows"], history, 0.5) == ([], [])
+    # regressions in either direction gate (3 prior samples)
+    assert mod.compare(_payload(40.0, 10.0)["rows"], history, 0.5)[0]
+    assert mod.compare(_payload(100.0, 20.0)["rows"], history, 0.5)[0]
+    # the same regression against thin per-metric history only warns
+    fails, warns = mod.compare(_payload(40.0, 10.0)["rows"], history[:2], 0.5)
+    assert fails == [] and warns
