@@ -24,7 +24,18 @@ METRICS = {
     "tokens_per_s": +1,
     "ttft_p50_ms": -1,
     "ttft_p99_ms_high": -1,   # QoS headline of the priority scenario
+    "cpu_us_per_call": -1,    # kernels bench (BENCH_kernels.json rows)
 }
+
+
+def row_key(row):
+    """Identity of a row across runs: serving rows carry ``mode``; kernel
+    rows carry (kernel, shape)."""
+    if row.get("mode") is not None:
+        return row["mode"]
+    if row.get("kernel") is not None:
+        return f"{row['kernel']}[{row.get('shape')}]"
+    return None
 
 
 def load_history(path):
@@ -64,12 +75,14 @@ def compare(current_rows, history, tol, min_history=3):
     its own history accumulates, regardless of how old the file is."""
     failures, warnings = [], []
     for row in current_rows:
-        mode = row.get("mode")
+        mode = row_key(row)
+        if mode is None:
+            continue
         for metric, sign in METRICS.items():
             if metric not in row:
                 continue
             prior = [r[metric] for p in history for r in p.get("rows", [])
-                     if r.get("mode") == mode and metric in r]
+                     if row_key(r) == mode and metric in r]
             if not prior:
                 continue
             med = statistics.median(prior)

@@ -64,8 +64,9 @@ def _stats_row(mode, eng, stats, dt, n_requests):
            "prefix_hit_rate": stats.prefix_hit_rate,
            "cow_copies": stats.cow_copies,
            "wall_s": dt}
-    if eng.allocator is not None:
-        row["pages_allocated"] = eng.allocator.total_allocated
+    if eng.allocators:
+        row["pages_allocated"] = sum(a.total_allocated
+                                     for a in eng.allocators)
     return row
 
 
@@ -160,6 +161,46 @@ def run_priority_mode(mode, cfg, plan, mesh, params, sz):
     return row, outputs
 
 
+def run_dp_mode(dp, cfg, plan, mesh, params, sz):
+    """dp-scaling scenario: two tenant groups, each sharing its own system
+    prompt.  With dp=2 the router splits the tenants across replicas by
+    prefix affinity, so each replica serves its tenant's prefix out of its
+    own replica-local pool — per-replica hit rates stay high and greedy
+    outputs are token-identical to the dp=1 oracle.  -> (row, outputs)."""
+    from repro.serving import Request, ServingEngine
+    eng = ServingEngine.build_paged(
+        cfg, plan, mesh, sz["slots"], sz["seq_budget"], params,
+        page_size=sz["page_size"], prefill_chunk=sz["chunk"],
+        prefix_cache=True, dp=dp)
+    rng = np.random.RandomState(3)
+    vocab = cfg.vocab_size
+    tenants = [rng.randint(2, vocab, sz["prefix"]).astype(np.int32)
+               for _ in range(2)]
+    reqs = []
+    for rid in range(2 * sz["requests"]):
+        suf = rng.randint(2, vocab, sz["suffix"]).astype(np.int32)
+        reqs.append(Request(
+            rid=rid, prompt=np.concatenate([tenants[rid % 2], suf]),
+            max_new_tokens=sz["max_new"]))
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    stats = eng.run(max_ticks=50_000)
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    row = _stats_row(f"dp{dp}", eng, stats, dt, len(reqs))
+    row["dp"] = dp
+    row["affinity_routed"] = eng.router.affinity_routed
+    for rr, rs in enumerate(stats.replicas):
+        row[f"prefix_hit_rate_r{rr}"] = rs.prefix_hit_rate
+        row[f"routed_r{rr}"] = rs.routed
+    # per-replica leak-freedom: every page free or cache-held after the run
+    for rr in range(dp):
+        a, c = eng.allocators[rr], eng.prefix_caches[rr]
+        assert a.n_free + c.n_cached_pages == a.n_pages - a.n_reserved, rr
+    return row, {r.rid: tuple(r.out_tokens) for r in reqs}
+
+
 def rows(smoke: bool = False):
     import jax
     from repro import compat
@@ -199,7 +240,20 @@ def rows(smoke: bool = False):
     assert pre_row["preemptions"] > 0
     # ...and the victims' KV was reused on resume, not recomputed
     assert pre_row["prefill_tokens_skipped"] > 0
-    return out + [fcfs_row, pre_row]
+    # dp scaling: replica-sharded pools + prefix-affinity routing
+    dp1_row, dp1_out = run_dp_mode(1, cfg, plan, mesh, params, sz)
+    dp2_row, dp2_out = run_dp_mode(2, cfg, plan, mesh, params, sz)
+    assert dp1_out == dp2_out, "outputs changed under dp=2 routing"
+    # each replica owns one tenant's prefix: both hit rates are nonzero
+    assert dp2_row["routed_r0"] > 0 and dp2_row["routed_r1"] > 0
+    assert dp2_row["prefix_hit_rate_r0"] > 0
+    assert dp2_row["prefix_hit_rate_r1"] > 0
+    print(f"# dp scaling: dp1={dp1_row['tokens_per_s']:.1f} tok/s "
+          f"dp2={dp2_row['tokens_per_s']:.1f} tok/s "
+          f"(replica hit rates {dp2_row['prefix_hit_rate_r0']:.2f}/"
+          f"{dp2_row['prefix_hit_rate_r1']:.2f}, "
+          f"{dp2_row['affinity_routed']} affinity-routed)")
+    return out + [fcfs_row, pre_row, dp1_row, dp2_row]
 
 
 def main(smoke=False, json_path=None):

@@ -137,14 +137,20 @@ def _map_tmpl(tmpl, fn):
 # single compiled decode/prefill-chunk pair serve arbitrary request mixes.
 #
 # Pool layout keeps the contiguous convention with the page pool standing in
-# for the batch dim:   kp / vp : (reps, n_pages, tp * n_kv_loc, psz, D)
-# sharded P(None, None, tpax, None, None): heads follow TP; the pool is
-# replicated over the data axes (block tables address it globally, so
-# paged serving currently targets dp=1 meshes; tp is fully supported).
+# for the batch dim:   kp / vp : (reps, n_replicas, n_pages, tp*n_kv_loc,
+# psz, D) sharded P(None, dp_axes, None, tpax, None, None): heads follow
+# TP, and the leading replica dim is sharded over the data axes so each
+# data shard holds only its own replicas' pages — the paper's
+# stationary-local-memory discipline at serving scale.  Block tables stay
+# replica-relative (ids in [0, n_pages)); ``core.steps`` folds each
+# shard's local replicas into one larger pool and offsets the tables
+# row-wise, so attention/kernels never see the replica dim.  With
+# n_replicas == 1 (the default) the layout degenerates to the old
+# replicated-pool dp=1 behavior.
 #
-# Page 0 is reserved as a scratch page: idle decode lanes point their block
-# tables at it, so the fused decode step can always run full-batch without
-# masking writes.
+# Page 0 of every replica is reserved as a scratch page: idle decode lanes
+# point their block tables at it, so the fused decode step can always run
+# full-batch without masking writes.
 
 SCRATCH_PAGE = 0
 
@@ -160,22 +166,49 @@ def paged_cache_supported(cfg) -> tuple:
     return True, ""
 
 
-def paged_cache_template(cfg, plan, lay, n_pages: int, page_size: int):
-    """Full paged cache template: list (per layer group) of stacked pools."""
+def paged_cache_template(cfg, plan, lay, n_pages: int, page_size: int,
+                         n_replicas: int = 1):
+    """Full paged cache template: list (per layer group) of stacked pools.
+
+    ``n_replicas`` adds a leading replica dim sharded over ``plan.dp_axes``
+    — each data shard stores only its replicas' pages (dp>1 serving)."""
     ok, why = paged_cache_supported(cfg)
     if not ok:
         raise ValueError(f"paged cache unsupported for {cfg.name}: {why}")
+    assert n_replicas >= 1, n_replicas
     kvd = jnp.dtype(plan.kv_cache_dtype)
     d = cfg.head_dim_
     tpax = "model" if plan.tp > 1 else None
-    pool = ((n_pages, plan.tp * lay.attn.n_kv_loc, page_size, d), kvd,
-            P(None, tpax, None, None))
+    dpax = tuple(plan.dp_axes)
+    pool = ((n_replicas, n_pages, plan.tp * lay.attn.n_kv_loc, page_size, d),
+            kvd, P(dpax, None, tpax, None, None))
     tmpl = []
     for g in cfg.layer_groups():
         per_pattern = [_stack_template({"kv": {"kp": pool, "vp": pool}},
                                        g.n_reps) for _ in g.pattern]
         tmpl.append(per_pattern)
     return tmpl
+
+
+def fold_replica_pools(cache):
+    """(reps, R_loc, n_pages, G, psz, D) -> (reps, R_loc*n_pages, G, psz, D).
+
+    Per-shard view: the shard's local replicas become one larger pool, so
+    the attention gather/scatter path is replica-agnostic.  Replica ``i``'s
+    page ``p`` lives at folded id ``i * n_pages + p`` (see
+    ``replica_table_offsets``)."""
+    return jax.tree_util.tree_map(
+        lambda pool: pool.reshape((pool.shape[0],
+                                   pool.shape[1] * pool.shape[2])
+                                  + pool.shape[3:]), cache)
+
+
+def unfold_replica_pools(cache, n_replicas_loc: int):
+    """Inverse of ``fold_replica_pools``."""
+    return jax.tree_util.tree_map(
+        lambda pool: pool.reshape(
+            (pool.shape[0], n_replicas_loc, pool.shape[1] // n_replicas_loc)
+            + pool.shape[2:]), cache)
 
 
 def zero_paged_cache(tmpl):
@@ -243,7 +276,14 @@ class PageAllocator:
                 self._free_set.add(p)
 
     def free(self, pages):
-        """Release sole-owner pages (drop one ref each)."""
+        """Release sole-owner pages.  Errors on a shared page: silently
+        dropping one of several refs here would hand a prefix-cache- or
+        slot-shared page back to the free list while it is still mapped —
+        use ``decref`` for the multi-ref case."""
+        for p in pages:
+            assert self._rc[p] == 1, \
+                f"free() of shared page {p} (refcount {self._rc[p]}); " \
+                f"multi-ref releases must go through decref()"
         self.decref(pages)
 
 

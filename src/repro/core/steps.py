@@ -480,102 +480,160 @@ def zero_cache_for(cfg, plan, mesh, batch, budget):
 # decode step is shaped by (batch_slots, n_pages, n_max_pages) and the chunk
 # step by (chunk, n_pages, n_max_pages) — prompt lengths appear only as data
 # (block tables, positions, lengths), never as shapes, so admission never
-# recompiles.  The page pool is replicated over the data axes (block tables
-# address it globally); heads keep the model-axis TP sharding.
+# recompiles.  Heads keep the model-axis TP sharding; the page pools carry a
+# leading replica dim sharded over the data axes (``n_replicas``), so with
+# dp>1 each data shard stores only its own replicas' pages.  Block tables
+# stay replica-relative: each per-shard function folds its local replicas
+# into one larger pool and offsets table rows by ``local_replica *
+# n_pages``, so attention and the Pallas kernels never see the replica dim,
+# and n_replicas == 1 reproduces the old dp=1 behavior exactly.
 
-def _paged_templates(cfg, plan, mesh, n_pages, page_size):
+def _paged_templates(cfg, plan, mesh, n_pages, page_size, n_replicas=1):
     assert not plan.seq_shard_kv, "paged cache is exclusive with seq_shard_kv"
     prepare_ledger(mesh)
     lay = model_layout(cfg, plan)
-    tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size)
+    tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size,
+                                        n_replicas)
     return lay, kvcache.abstract_cache(tmpl), kvcache.cache_pspecs(tmpl)
 
 
+def n_replicas_local(mesh, plan, n_replicas: int) -> int:
+    """Replicas resident per data shard.  n_replicas must cover the data
+    axes evenly (each shard owns a whole number of replica pools)."""
+    nd = n_dp(mesh, plan)
+    assert n_replicas % nd == 0, \
+        (f"n_replicas={n_replicas} must be a multiple of the mesh's data "
+         f"extent {nd}")
+    return n_replicas // nd
+
+
 def make_paged_decode_step(cfg, plan, mesh, batch: int, n_pages: int,
-                           page_size: int, n_max_pages: int):
-    """-> (decode_fn(params, cache, tokens (B,1), pos (B,), block_table
-    (B, n_max)) -> (logits, cache), templates, specs)."""
+                           page_size: int, n_max_pages: int,
+                           n_replicas: int = 1):
+    """-> (decode_fn(params, cache, tokens (R*B,1), pos (R*B,), block_table
+    (R*B, n_max)) -> (logits, cache), templates, specs).
+
+    ``batch`` is the per-replica slot count; the global decode batch covers
+    all ``n_replicas`` replicas' slots (rows r*B..r*B+B-1 belong to replica
+    r) and is sharded over the data axes alongside the pools, so one
+    compiled step drives every replica."""
     lay, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
-                                             page_size)
+                                             page_size, n_replicas)
     pspecs = model.param_pspecs(cfg, plan)
+    r_loc = n_replicas_local(mesh, plan, n_replicas)
+    bt_ax = batch_axes(plan)
 
     def per_shard(params, cache, tokens, pos, block_table):
-        pages = {"block_table": block_table, "page_size": page_size}
-        return model.forward_decode(params, cache, tokens, pos, cfg, plan,
-                                    lay, pages=pages)
+        # fold this shard's replicas into one pool; rows stay
+        # replica-relative, so offset each row into its replica's range
+        offs = (jnp.arange(r_loc * batch, dtype=jnp.int32)
+                // batch)[:, None] * n_pages
+        pages = {"block_table": block_table + offs, "page_size": page_size}
+        logits, folded = model.forward_decode(
+            params, kvcache.fold_replica_pools(cache), tokens, pos, cfg,
+            plan, lay, pages=pages)
+        return logits, kvcache.unfold_replica_pools(folded, r_loc)
 
-    s = {"cache": cache_s, "tokens1": P(None, None), "pos": P(None),
-         "block_table": P(None, None)}
+    s = {"cache": cache_s, "tokens1": P(bt_ax, None), "pos": P(bt_ax),
+         "block_table": P(bt_ax, None)}
     t = {"cache": cache_t,
-         "tokens1": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
-         "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
-         "block_table": jax.ShapeDtypeStruct((batch, n_max_pages),
-                                             jnp.int32)}
+         "tokens1": jax.ShapeDtypeStruct((n_replicas * batch, 1), jnp.int32),
+         "pos": jax.ShapeDtypeStruct((n_replicas * batch,), jnp.int32),
+         "block_table": jax.ShapeDtypeStruct(
+             (n_replicas * batch, n_max_pages), jnp.int32)}
     fn = _shard_map(per_shard, mesh,
                     in_specs=(pspecs, s["cache"], s["tokens1"], s["pos"],
                               s["block_table"]),
-                    out_specs=(P(None, "model"), s["cache"]))
+                    out_specs=(P(bt_ax, "model"), s["cache"]))
     return fn, t, s
 
 
 def make_prefill_chunk_step(cfg, plan, mesh, chunk: int, n_pages: int,
-                            page_size: int, n_max_pages: int):
-    """-> (chunk_fn(params, cache, tokens (1,C), chunk_start (), last_idx (),
-    block_table (1, n_max)) -> (logits, cache), templates, specs)."""
+                            page_size: int, n_max_pages: int,
+                            n_replicas: int = 1):
+    """-> (chunk_fn(params, cache, tokens (R,C), chunk_start (R,), last_idx
+    (R,), block_table (R, n_max)) -> (logits (R, V), cache), templates,
+    specs).
+
+    Row r advances one prefill chunk for replica r; a replica with nothing
+    to prefill rides along pointed at its scratch page (all-SCRATCH_PAGE
+    block-table row, zero tokens) and its logits row is ignored.  On a dp
+    mesh each shard runs only its own replicas' chunks in parallel."""
     lay, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
-                                             page_size)
+                                             page_size, n_replicas)
     pspecs = model.param_pspecs(cfg, plan)
+    r_loc = n_replicas_local(mesh, plan, n_replicas)
+    bt_ax = batch_axes(plan)
 
     def per_shard(params, cache, tokens, chunk_start, last_idx, block_table):
-        pages = {"block_table": block_table, "page_size": page_size}
-        return model.forward_prefill_chunk(params, cache, tokens,
-                                           chunk_start, last_idx, cfg, plan,
-                                           lay, pages)
+        folded = kvcache.fold_replica_pools(cache)
+        logits = []
+        for i in range(r_loc):               # one chunk per local replica
+            pages = {"block_table": block_table[i:i + 1] + i * n_pages,
+                     "page_size": page_size}
+            lg, folded = model.forward_prefill_chunk(
+                params, folded, tokens[i:i + 1], chunk_start[i],
+                last_idx[i], cfg, plan, lay, pages)
+            logits.append(lg)
+        return (jnp.concatenate(logits, axis=0),
+                kvcache.unfold_replica_pools(folded, r_loc))
 
-    s = {"cache": cache_s, "tokens": P(None, None), "chunk_start": P(),
-         "last_idx": P(), "block_table": P(None, None)}
+    s = {"cache": cache_s, "tokens": P(bt_ax, None),
+         "chunk_start": P(bt_ax), "last_idx": P(bt_ax),
+         "block_table": P(bt_ax, None)}
     t = {"cache": cache_t,
-         "tokens": jax.ShapeDtypeStruct((1, chunk), jnp.int32),
-         "chunk_start": jax.ShapeDtypeStruct((), jnp.int32),
-         "last_idx": jax.ShapeDtypeStruct((), jnp.int32),
-         "block_table": jax.ShapeDtypeStruct((1, n_max_pages), jnp.int32)}
+         "tokens": jax.ShapeDtypeStruct((n_replicas, chunk), jnp.int32),
+         "chunk_start": jax.ShapeDtypeStruct((n_replicas,), jnp.int32),
+         "last_idx": jax.ShapeDtypeStruct((n_replicas,), jnp.int32),
+         "block_table": jax.ShapeDtypeStruct((n_replicas, n_max_pages),
+                                             jnp.int32)}
     fn = _shard_map(per_shard, mesh,
                     in_specs=(pspecs, s["cache"], s["tokens"],
                               s["chunk_start"], s["last_idx"],
                               s["block_table"]),
-                    out_specs=(P(None, "model"), s["cache"]))
+                    out_specs=(P(bt_ax, "model"), s["cache"]))
     return fn, t, s
 
 
-def make_page_copy_step(cfg, plan, mesh, n_pages: int, page_size: int):
-    """-> (copy_fn(cache, src (), dst ()) -> cache, templates, specs).
+def make_page_copy_step(cfg, plan, mesh, n_pages: int, page_size: int,
+                        n_replicas: int = 1):
+    """-> (copy_fn(cache, src (R,), dst (R,)) -> cache, templates, specs).
 
-    Copies one page's K/V across every layer pool — the mechanism behind
-    copy-on-write divergence: a slot that must append into a shared page
-    (radix prefix cache, ``serving.prefix_cache``) first duplicates it into
-    a private page, then writes only the copy.  Page ids are data, so one
-    compiled step serves every (src, dst) pair."""
+    Copies one page's K/V across every layer pool, per replica — the
+    mechanism behind copy-on-write divergence: a slot that must append into
+    a shared page (radix prefix cache, ``serving.prefix_cache``) first
+    duplicates it into a private page, then writes only the copy.  Page ids
+    are replica-relative data, so one compiled step serves every (src, dst)
+    mix; a replica with no copy this call passes src == dst (identity)."""
     _, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
-                                           page_size)
+                                           page_size, n_replicas)
+    r_loc = n_replicas_local(mesh, plan, n_replicas)
+    bt_ax = batch_axes(plan)
 
     def per_shard(cache, src, dst):
-        def leaf(pool):                      # (reps, n_pages, G, psz, D)
-            page = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
-            return jax.lax.dynamic_update_slice_in_dim(pool, page, dst,
-                                                       axis=1)
+        def leaf(pool):          # (reps, R_loc, n_pages, G, psz, D) folded
+            pool = kvcache.fold_replica_pools(pool)
+            for i in range(r_loc):
+                page = jax.lax.dynamic_slice_in_dim(
+                    pool, src[i] + i * n_pages, 1, axis=1)
+                pool = jax.lax.dynamic_update_slice_in_dim(
+                    pool, page, dst[i] + i * n_pages, axis=1)
+            return kvcache.unfold_replica_pools(pool, r_loc)
         return jax.tree_util.tree_map(leaf, cache)
 
-    s = {"cache": cache_s, "src": P(), "dst": P()}
+    s = {"cache": cache_s, "src": P(bt_ax), "dst": P(bt_ax)}
     t = {"cache": cache_t,
-         "src": jax.ShapeDtypeStruct((), jnp.int32),
-         "dst": jax.ShapeDtypeStruct((), jnp.int32)}
+         "src": jax.ShapeDtypeStruct((n_replicas,), jnp.int32),
+         "dst": jax.ShapeDtypeStruct((n_replicas,), jnp.int32)}
     fn = _shard_map(per_shard, mesh,
                     in_specs=(s["cache"], s["src"], s["dst"]),
                     out_specs=s["cache"])
     return fn, t, s
 
 
-def zero_paged_cache_for(cfg, plan, mesh, n_pages, page_size):
+def zero_paged_cache_for(cfg, plan, mesh, n_pages, page_size,
+                         n_replicas: int = 1):
     lay = model_layout(cfg, plan)
-    tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size)
+    tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size,
+                                        n_replicas)
     return kvcache.zero_paged_cache(tmpl)

@@ -9,10 +9,17 @@ TTFT / per-token latency / throughput.
 
 Scheduling policy is selected with ``--policy {fcfs,priority,fair}``;
 ``--policy priority --preemption`` additionally evicts low-priority slots
-when urgent requests arrive (paged engine only; see README §Serving).
+when urgent requests arrive, and ``--policy fair --preemption`` enables
+preemptive DRR (paged engine only; see README §Serving).
 ``--high-priority-every N`` marks every Nth request urgent and the report
 then splits TTFT per class; ``--clients N`` spreads requests across N
 client ids for the fair policy.
+
+``--dp N`` (paged engine only) runs N data-parallel replicas, each with
+``--slots`` slots and its own replica-local page pool / prefix cache /
+scheduler; a router assigns requests by prefix affinity then page load,
+and the report splits stats per replica.  Replicas shard over the mesh's
+data axis when enough devices exist (they co-locate otherwise).
 """
 from __future__ import annotations
 
@@ -34,6 +41,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replicas with replica-local page "
+                         "pools and a prefix-affinity router (implies "
+                         "--paged)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--paged", action="store_true",
@@ -62,10 +73,13 @@ def main(argv=None):
     if args.shared_prefix + args.prompt_len + args.max_new > args.seq_budget:
         ap.error("--shared-prefix + --prompt-len + --max-new must fit "
                  "--seq-budget")
-    if args.preemption and args.policy != "priority":
-        ap.error("--preemption requires --policy priority")
-    if args.preemption and not (args.paged or args.prefix_cache):
+    if args.preemption and args.policy not in ("priority", "fair"):
+        ap.error("--preemption requires --policy priority or fair")
+    if args.preemption and not (args.paged or args.prefix_cache
+                                or args.dp > 1):
         ap.error("--preemption requires the paged engine (--paged)")
+    if args.dp < 1:
+        ap.error("--dp must be >= 1")
 
     import jax
     from repro.configs import get_config, reduced
@@ -80,7 +94,12 @@ def main(argv=None):
     if args.smoke:
         cfg = reduced(cfg)
     plan = ShardingPlan(tp=args.tp)
-    mesh = host_mesh(tp=args.tp, dp=1)
+    # shard replicas over real devices when they exist; otherwise they
+    # co-locate on one data shard (n_replicas must cover the mesh evenly)
+    mesh_dp = max((d for d in range(1, args.dp + 1)
+                   if args.dp % d == 0 and
+                   d * args.tp <= len(jax.devices())), default=1)
+    mesh = host_mesh(tp=args.tp, dp=mesh_dp)
     params = model.init_params(cfg, plan, seed=args.seed)
 
     scheduler = None                 # engine default: FCFS
@@ -88,16 +107,17 @@ def main(argv=None):
         scheduler = functools.partial(PriorityScheduler,
                                       preemption=args.preemption)
     elif args.policy == "fair":
-        scheduler = FairScheduler
+        scheduler = functools.partial(FairScheduler,
+                                      preemption=args.preemption)
 
     sampler = SamplerConfig(temperature=args.temperature, top_k=40)
-    if args.paged or args.prefix_cache:
+    if args.paged or args.prefix_cache or args.dp > 1:
         engine = ServingEngine.build_paged(
             cfg, plan, mesh, args.slots, args.seq_budget, params,
             page_size=args.page_size, n_pages=args.n_pages,
             prefill_chunk=args.prefill_chunk, sampler=sampler,
             prefix_cache=args.prefix_cache, scheduler=scheduler,
-            rng_seed=args.seed)
+            rng_seed=args.seed, dp=args.dp)
     else:
         dshape = ShapeConfig("serve", "decode", args.seq_budget, args.slots)
         pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
@@ -144,12 +164,25 @@ def main(argv=None):
                       f"p99={np.percentile(ts, 99) * 1e3:.1f}ms "
                       f"n={len(ts)}")
     if args.prefix_cache:
+        cached = sum(c.n_cached_pages for c in engine.prefix_caches if c)
+        evictions = sum(c.evictions for c in engine.prefix_caches if c)
         print(f"prefix_cache: hit_rate={stats.prefix_hit_rate:.2f} "
               f"({stats.prefix_hits}/{stats.prefix_lookups} lookups) "
               f"prefill_tokens_skipped={stats.prefill_tokens_skipped} "
               f"cow_copies={stats.cow_copies} "
-              f"cached_pages={engine.prefix_cache.n_cached_pages} "
-              f"evictions={engine.prefix_cache.evictions}")
+              f"cached_pages={cached} evictions={evictions}")
+    if args.dp > 1:
+        print(f"router: affinity_routed={engine.router.affinity_routed}"
+              f"/{args.requests}")
+        for r, rs in enumerate(stats.replicas):
+            alloc = engine.allocators[r]
+            print(f"replica[{r}]: routed={rs.routed} "
+                  f"prefills={rs.prefills} tokens={rs.decoded_tokens} "
+                  f"preemptions={rs.preemptions} "
+                  f"prefix_hit_rate={rs.prefix_hit_rate:.2f} "
+                  f"pages_allocated={alloc.total_allocated} "
+                  f"pages_free={alloc.n_free}/"
+                  f"{alloc.n_pages - alloc.n_reserved}")
     slowest = sorted(stats.request_ttft.items(), key=lambda kv: -kv[1])[:3]
     print("ttft_per_request_worst3: " +
           " ".join(f"rid{r}={t * 1e3:.1f}ms" for r, t in slowest))

@@ -19,7 +19,7 @@ Two cache disciplines, selected by the ``paged`` flag:
 * **contiguous** (reference oracle): each slot owns an exact-length cache
   lane; admission prefills the whole prompt in one step (recompiling per
   prompt length) and splices the lane in.
-* **paged**: K/V live in a fixed pool of fixed-size pages
+* **paged**: K/V live in fixed pools of fixed-size pages
   (``core.kvcache``); admission allocates the slot's block table up front
   (prompt + max_new_tokens worth — all-or-nothing, so requests queue
   instead of OOMing mid-flight), prefill advances one fixed-size chunk per
@@ -30,9 +30,23 @@ Two cache disciplines, selected by the ``paged`` flag:
   token, copying partially-shared pages copy-on-write
   (``serving.prefix_cache``).
 
+**Data parallelism** (``dp`` — paged engine only): the engine runs ``dp``
+*replicas*, each with its own ``batch_slots`` slots and — crucially — its
+own replica-local ``PageAllocator``, ``RadixPrefixCache`` and
+``Scheduler`` instance, so page refcounts, prefix pins, eviction and
+preemption donations never cross a replica boundary.  The page pools carry
+a leading replica dim sharded over ``plan.dp_axes`` (``core.kvcache``), so
+on a dp mesh each data shard stores only its replica's pages — the
+paper's stationary-local-memory discipline.  A ``serving.router.Router``
+assigns every submitted request to a replica (longest-prefix-hit affinity
+first, then least page load) and the single ``run()`` loop drives all
+replicas' slots through one compiled decode step per tick; per-replica
+counters land in ``EngineStats.replicas``.  ``dp=1`` (the default) is the
+old single-pool engine, token-for-token.
+
 Sampling is schedule-invariant: every request draws from its own seeded
 RNG stream (``Request.rng``), so non-greedy outputs do not depend on
-admission order, batch composition, or preemption points.
+admission order, batch composition, replica routing, or preemption points.
 
 The engine is mesh-agnostic: it drives whatever step functions
 ``core.steps`` built — 1-device CPU smoke or a full pod.
@@ -49,6 +63,7 @@ import numpy as np
 
 from repro.core.kvcache import SCRATCH_PAGE, PageAllocator
 from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.router import Router
 from repro.serving.sampler import SamplerConfig, sample_from_logits
 from repro.serving.scheduler import (Admission, FCFSScheduler, Scheduler,
                                      effective_prompt)
@@ -63,11 +78,28 @@ class Request:
     client_id: int = 0                 # fairness accounting key (policies.py)
     seed: Optional[int] = None         # sampling stream seed (default: rid)
     rng: Optional[np.random.RandomState] = None   # set at submit
+    replica: int = -1                  # routed data shard (set at submit)
     out_tokens: list = field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+
+
+@dataclass
+class ReplicaStats:
+    """Per-replica counters (``EngineStats.replicas[r]``)."""
+    routed: int = 0                    # requests the router assigned here
+    prefills: int = 0
+    decoded_tokens: int = 0
+    preemptions: int = 0
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / self.prefix_lookups \
+            if self.prefix_lookups else 0.0
 
 
 @dataclass
@@ -82,6 +114,7 @@ class EngineStats:
     prefix_hits: int = 0
     tpot_s: list = field(default_factory=list)
     request_ttft: dict = field(default_factory=dict)   # rid -> seconds
+    replicas: List[ReplicaStats] = field(default_factory=list)
 
     @property
     def ttft_s(self) -> list:
@@ -101,22 +134,29 @@ class ServingEngine:
                  paged: bool = False, page_size: int = 16,
                  n_pages: int = 0, prefill_chunk: int = 0,
                  prefix_cache: bool = False, scheduler=None,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, dp: int = 1):
         from repro.core import steps as _steps
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
-        self.B, self.S = batch_slots, seq_budget
+        assert dp >= 1, dp
+        assert paged or dp == 1, "dp>1 serving requires the paged engine"
+        self.R = dp                    # data-parallel replicas
+        self.Bp = batch_slots          # slots per replica
+        self.B = batch_slots * dp      # global slots (the decode batch)
+        self.S = seq_budget
         self.params = params
-        self.prefill_fn = prefill_fn   # jitted: batch=1 lane / paged chunk
-        self.decode_fn = decode_fn     # jitted, batch=B
+        self.prefill_fn = prefill_fn   # jitted: batch=1 lane / paged chunks
+        self.decode_fn = decode_fn     # jitted, batch=R*Bp
         self.eos = eos_id
         self.sampler = sampler or SamplerConfig()
-        self.admissions: List[Optional[Admission]] = [None] * batch_slots
-        self.pos = np.zeros(batch_slots, np.int32)
-        self.last_token = np.zeros(batch_slots, np.int32)
+        self.admissions: List[Optional[Admission]] = [None] * self.B
+        self.pos = np.zeros(self.B, np.int32)
+        self.last_token = np.zeros(self.B, np.int32)
         self.paged = paged
-        self.stats = EngineStats()
-        self.allocator = None
-        self.prefix_cache = None
+        self.stats = EngineStats(replicas=[ReplicaStats()
+                                           for _ in range(self.R)])
+        self.allocators: List[PageAllocator] = []
+        self.prefix_caches: List[Optional[RadixPrefixCache]] = []
+        self.router: Optional[Router] = None
         if paged:
             assert seq_budget % page_size == 0, (seq_budget, page_size)
             assert prefill_chunk > 0 and seq_budget % prefill_chunk == 0, \
@@ -124,31 +164,51 @@ class ServingEngine:
             self.page_size = page_size
             self.chunk = prefill_chunk
             self.n_max_pages = seq_budget // page_size
-            self.allocator = PageAllocator(n_pages)
-            if prefix_cache:
-                self.prefix_cache = RadixPrefixCache(self.allocator,
-                                                     page_size)
-            self.slot_state: List[Optional[str]] = [None] * batch_slots
-            self.prefill_done = np.zeros(batch_slots, np.int32)
+            # replica-local pools: refcounts never cross a replica boundary
+            self.allocators = [PageAllocator(n_pages) for _ in range(dp)]
+            self.prefix_caches = [
+                RadixPrefixCache(a, page_size) if prefix_cache else None
+                for a in self.allocators]
+            self.slot_state: List[Optional[str]] = [None] * self.B
+            self.prefill_done = np.zeros(self.B, np.int32)
             self.cache = _steps.zero_paged_cache_for(cfg, plan, mesh,
-                                                     n_pages, page_size)
+                                                     n_pages, page_size,
+                                                     n_replicas=dp)
             copy_fn, _, _ = _steps.make_page_copy_step(cfg, plan, mesh,
-                                                       n_pages, page_size)
+                                                       n_pages, page_size,
+                                                       n_replicas=dp)
             self.copy_fn = jax.jit(copy_fn)
         else:
             assert not prefix_cache, "prefix cache requires the paged engine"
             self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
                                                seq_budget)
-        # ``scheduler`` is either a ready instance or a factory (a Scheduler
-        # subclass / functools.partial): factories receive the engine-owned
-        # shared state, so callers can pass e.g. ``PriorityScheduler``
-        # without pre-building the allocator themselves.
+        # ``scheduler`` is either a ready instance (dp=1 only) or a factory
+        # (a Scheduler subclass / functools.partial): factories receive the
+        # engine-owned shared state, so callers can pass e.g.
+        # ``PriorityScheduler`` without pre-building the allocator
+        # themselves.  With dp>1 one instance is built per replica so every
+        # policy's bookkeeping (queues, deficits, aging clocks) is
+        # replica-local.
         sched = scheduler or FCFSScheduler
-        if not isinstance(sched, Scheduler):
-            sched = sched(seq_budget=seq_budget, allocator=self.allocator,
-                          page_size=page_size if paged else 0,
-                          prefix_cache=self.prefix_cache, stats=self.stats)
-        self.sched = sched
+        if isinstance(sched, Scheduler):
+            assert dp == 1, "dp>1 needs a scheduler factory, not an instance"
+            self.scheds = [sched]
+        else:
+            self.scheds = [
+                sched(seq_budget=seq_budget,
+                      allocator=self.allocators[r] if paged else None,
+                      page_size=page_size if paged else 0,
+                      prefix_cache=self.prefix_caches[r] if paged else None,
+                      stats=self.stats)
+                for r in range(dp)]
+        for r, s in enumerate(self.scheds):
+            # per-replica counters update at the scheduler's single
+            # counting site, alongside the global stats
+            if getattr(s, "replica_stats", None) is None:
+                s.replica_stats = self.stats.replicas[r]
+        if paged:
+            self.router = Router(self.scheds, self.allocators,
+                                 self.prefix_caches, page_size)
         self._rids: set = set()
         self.rng_seed = rng_seed
 
@@ -158,46 +218,88 @@ class ServingEngine:
                     prefill_chunk: int = 16, eos_id: int = 1,
                     sampler: Optional[SamplerConfig] = None,
                     prefix_cache: bool = False, scheduler=None,
-                    rng_seed: int = 0):
+                    rng_seed: int = 0, dp: int = 1):
         """Construct a paged engine, compiling its (chunk, decode) pair.
 
-        ``n_pages`` defaults to full occupancy (every slot at budget) plus
-        the scratch page; pass something smaller to exercise admission
-        control under memory pressure."""
+        ``n_pages`` is the PER-REPLICA pool size and defaults to full
+        occupancy (every slot at budget) plus the scratch page; pass
+        something smaller to exercise admission control under memory
+        pressure.  ``dp`` replicas each get ``batch_slots`` slots and their
+        own pool, driven together by one compiled step pair."""
         from repro.core import steps as _steps
         n_max = seq_budget // page_size
         n_pages = n_pages or batch_slots * n_max + 1
         dec, _, _ = _steps.make_paged_decode_step(
-            cfg, plan, mesh, batch_slots, n_pages, page_size, n_max)
+            cfg, plan, mesh, batch_slots, n_pages, page_size, n_max,
+            n_replicas=dp)
         chunk_fn, _, _ = _steps.make_prefill_chunk_step(
-            cfg, plan, mesh, prefill_chunk, n_pages, page_size, n_max)
+            cfg, plan, mesh, prefill_chunk, n_pages, page_size, n_max,
+            n_replicas=dp)
         return cls(cfg, plan, mesh, batch_slots, seq_budget, params,
                    jax.jit(chunk_fn), jax.jit(dec), eos_id=eos_id,
                    sampler=sampler, paged=True, page_size=page_size,
                    n_pages=n_pages, prefill_chunk=prefill_chunk,
                    prefix_cache=prefix_cache, scheduler=scheduler,
-                   rng_seed=rng_seed)
+                   rng_seed=rng_seed, dp=dp)
 
     # ------------------------------------------------------------------ API
     @property
+    def sched(self):
+        """The single scheduler (dp=1 compatibility accessor)."""
+        assert self.R == 1, "dp>1: use engine.scheds[r] / has_pending()"
+        return self.scheds[0]
+
+    @property
+    def allocator(self):
+        """The single allocator (dp=1 compatibility accessor)."""
+        if not self.paged:
+            return None
+        assert self.R == 1, "dp>1: use engine.allocators[r]"
+        return self.allocators[0]
+
+    @property
+    def prefix_cache(self):
+        """The single prefix cache (dp=1 compatibility accessor)."""
+        if not self.paged:
+            return None
+        assert self.R == 1, "dp>1: use engine.prefix_caches[r]"
+        return self.prefix_caches[0]
+
+    @property
     def slots(self) -> List[Optional[Request]]:
-        """Requests in flight, by slot (derived from the admissions)."""
+        """Requests in flight, by global slot (derived from admissions)."""
         return [a.req if a is not None else None for a in self.admissions]
+
+    def _rep(self, b: int) -> int:
+        """Replica owning global slot ``b``."""
+        return b // self.Bp
+
+    def _gslot(self, r: int, local: int) -> int:
+        """Replica-local slot index -> global slot index."""
+        return r * self.Bp + local
+
+    def has_pending(self) -> bool:
+        return any(s.has_pending() for s in self.scheds)
 
     def submit(self, req: Request):
         if req.rid in self._rids:     # rids key the per-request stats
             raise RuntimeError(f"duplicate request id {req.rid}")
-        self.sched.submit(req)        # raises on infeasible requests
+        r = self.router.route(req) if self.router is not None else 0
+        self.scheds[r].submit(req)    # raises on infeasible requests
+        if self.router is not None:
+            self.router.commit(req, r)
+        req.replica = r
+        self.stats.replicas[r].routed += 1
         self._rids.add(req.rid)
         if req.rng is None:
             # one private stream per request: sampled outputs depend only on
-            # (engine seed, request seed), never on scheduling
+            # (engine seed, request seed), never on scheduling or routing
             seed = req.seed if req.seed is not None else req.rid
             req.rng = np.random.RandomState([self.rng_seed, seed])
         req.t_submit = time.monotonic()
 
     def run(self, max_ticks: int = 10_000):
-        while (self.sched.has_pending() or
+        while (self.has_pending() or
                any(a is not None for a in self.admissions)) and \
                 self.stats.ticks < max_ticks:
             self.tick()
@@ -205,38 +307,41 @@ class ServingEngine:
 
     def drain(self) -> int:
         """Abort every in-flight admission (e.g. after ``run`` exhausted
-        ``max_ticks``): each is routed through ``sched.on_finish`` so its
-        pages return to the pool — no leaked refcounts.  Aborted requests
-        keep ``done=False``; queued-but-never-admitted requests hold no
-        resources and stay queued.  -> number of slots drained."""
+        ``max_ticks``): each is routed through its own replica's
+        ``sched.on_finish`` so its pages return to that replica's pool —
+        no leaked refcounts.  Aborted requests keep ``done=False``;
+        queued-but-never-admitted requests hold no resources and stay
+        queued.  -> number of slots drained."""
         n = 0
         for b in range(self.B):
             adm = self.admissions[b]
             if adm is None:
                 continue
-            self.sched.on_finish(adm)
+            self.scheds[self._rep(b)].on_finish(adm)
             self._clear_slot(b)
             n += 1
         return n
 
     def preempt(self, b: int):
-        """Evict slot ``b`` mid-flight.  The slot's progress needs no
-        explicit snapshot: emitted tokens already live on
+        """Evict global slot ``b`` mid-flight.  The slot's progress needs
+        no explicit snapshot: emitted tokens already live on
         ``req.out_tokens``, and resume re-admits over the *effective
         prompt* (prompt + emitted tokens), so ``pos``/``prefill_done``
         are reconstructed by ordinary admission.  The resident full pages
-        are donated to the prefix cache via ``sched.on_preempt`` — resume
-        finds them as a prefix hit and the victim's KV is reused, not
-        recomputed (only the partial tail page is re-prefilled)."""
+        are donated to the OWNING REPLICA's prefix cache via its
+        ``sched.on_preempt`` — resume finds them as a prefix hit on the
+        same replica (routing is sticky) and the victim's KV is reused,
+        not recomputed (only the partial tail page is re-prefilled)."""
         assert self.paged, "preemption requires the paged engine"
         adm = self.admissions[b]
         assert adm is not None, f"slot {b} is idle"
         n = int(self.prefill_done[b]) if self.slot_state[b] == "prefill" \
             else int(self.pos[b])
         resident = effective_prompt(adm.req)[:n]
-        self.sched.on_preempt(adm, resident)
+        self.scheds[self._rep(b)].on_preempt(adm, resident)
         self._clear_slot(b)
         self.stats.preemptions += 1
+        self.stats.replicas[self._rep(b)].preemptions += 1
 
     def _clear_slot(self, b: int):
         self.admissions[b] = None
@@ -285,6 +390,7 @@ class ServingEngine:
         req.out_tokens.append(tok)
         self.last_token[b] = tok
         self.stats.decoded_tokens += 1
+        self.stats.replicas[self._rep(b)].decoded_tokens += 1
         if tok == self.eos or len(req.out_tokens) >= req.max_new_tokens \
                 or self.pos[b] >= self.S - 1:
             req.done = True
@@ -292,12 +398,12 @@ class ServingEngine:
             self.stats.tpot_s.append(
                 (now - req.t_first_token) /
                 max(len(req.out_tokens) - 1, 1))
-            self.sched.on_finish(self.admissions[b])
+            self.scheds[self._rep(b)].on_finish(self.admissions[b])
             self._clear_slot(b)
 
     def _admit(self):
         free = [b for b in range(self.B) if self.admissions[b] is None]
-        for adm in self.sched.plan(free):
+        for adm in self.scheds[0].plan(free):
             self.admissions[adm.slot] = adm
             self._prefill_into(adm.slot, adm.req)
 
@@ -314,6 +420,7 @@ class ServingEngine:
             logits, lane_cache = self.prefill_fn(
                 self.params, jnp.asarray(prompt[:, :S]), lane_cache)
         self.stats.prefills += 1
+        self.stats.replicas[self._rep(b)].prefills += 1
         # splice lane 0 of lane_cache into slot b of the engine cache
         self.cache = _splice_cache(self.cache, lane_cache, b)
         logits = np.asarray(jax.device_get(logits)).astype(np.float32)
@@ -326,40 +433,59 @@ class ServingEngine:
 
     # ------------------------------------------------------------ paged tick
     def _tick_paged(self):
-        active = [a for a in self.admissions if a is not None]
-        for adm in self.sched.plan_preemptions(active,
-                                               self.B - len(active)):
-            self.preempt(adm.slot)
+        for r in range(self.R):
+            active = [self.admissions[b] for b in self._rep_slots(r)
+                      if self.admissions[b] is not None]
+            for adm in self.scheds[r].plan_preemptions(
+                    active, self.Bp - len(active)):
+                self.preempt(self._gslot(r, adm.slot))
         self._admit_paged()
-        for b in range(self.B):
-            if self.admissions[b] is not None and \
-                    self.slot_state[b] == "prefill":
-                self._prefill_chunk(b)
+        self._prefill_tick_paged()
         self._decode_tick_paged()
         self.stats.ticks += 1
 
+    def _rep_slots(self, r: int):
+        return range(r * self.Bp, (r + 1) * self.Bp)
+
     def _admit_paged(self):
-        """Execute this tick's admissions from the scheduler."""
-        free = [b for b in range(self.B) if self.admissions[b] is None]
-        for adm in self.sched.plan(free):
-            b = adm.slot
-            self.admissions[b] = adm
-            self.slot_state[b] = "prefill"
-            if adm.cow is not None:
-                src, dst = adm.cow
-                with self.mesh:
-                    self.cache = self.copy_fn(self.cache,
-                                              jnp.asarray(src, jnp.int32),
-                                              jnp.asarray(dst, jnp.int32))
-                self.sched.on_cow_done(adm)
-                self.stats.cow_copies += 1
-            # prefix-cached tokens are already resident: prefill resumes at
-            # the first uncached position (for a preempted request this is
-            # its donated progress — reused, not recomputed)
-            self.prefill_done[b] = adm.cached_len
-            self.stats.prefill_tokens_skipped += adm.cached_len
-            self.pos[b] = 0
-            self.last_token[b] = 0
+        """Execute this tick's admissions, per replica.  COW page copies
+        are batched across replicas: each compiled copy call carries one
+        (src, dst) pair per replica (identity pairs for replicas with
+        nothing to copy)."""
+        cow_rounds: List[List[Optional[Admission]]] = []
+        for r in range(self.R):
+            free = [b - r * self.Bp for b in self._rep_slots(r)
+                    if self.admissions[b] is None]
+            n_cow = 0
+            for adm in self.scheds[r].plan(free):
+                b = self._gslot(r, adm.slot)
+                self.admissions[b] = adm
+                self.slot_state[b] = "prefill"
+                if adm.cow is not None:
+                    if n_cow == len(cow_rounds):
+                        cow_rounds.append([None] * self.R)
+                    cow_rounds[n_cow][r] = adm
+                    n_cow += 1
+                # prefix-cached tokens are already resident: prefill resumes
+                # at the first uncached position (for a preempted request
+                # this is its donated progress — reused, not recomputed)
+                self.prefill_done[b] = adm.cached_len
+                self.stats.prefill_tokens_skipped += adm.cached_len
+                self.pos[b] = 0
+                self.last_token[b] = 0
+        for round_ in cow_rounds:
+            src = np.full(self.R, SCRATCH_PAGE, np.int32)
+            dst = np.full(self.R, SCRATCH_PAGE, np.int32)   # src==dst: no-op
+            for r, adm in enumerate(round_):
+                if adm is not None:
+                    src[r], dst[r] = adm.cow
+            with self.mesh:
+                self.cache = self.copy_fn(self.cache,
+                                          jnp.asarray(src), jnp.asarray(dst))
+            for r, adm in enumerate(round_):
+                if adm is not None:
+                    self.scheds[r].on_cow_done(adm)
+                    self.stats.cow_copies += 1
 
     def _bt_row(self, b: int) -> np.ndarray:
         row = np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
@@ -368,32 +494,63 @@ class ServingEngine:
             row[:len(adm.pages)] = adm.pages
         return row
 
-    def _prefill_chunk(self, b: int):
-        """Advance slot b's prefill by one fixed-size chunk."""
-        req = self.admissions[b].req
-        prompt = effective_prompt(req)     # includes resumed output tokens
-        L, C = len(prompt), self.chunk
-        c0 = int(self.prefill_done[b])
-        chunk_toks = np.zeros((1, C), np.int32)
-        n = min(C, L - c0)
-        chunk_toks[0, :n] = prompt[c0:c0 + n]
-        last_idx = min(L - 1 - c0, C - 1)
+    def _prefill_tick_paged(self):
+        """Advance every prefilling slot by one chunk.  Slots are batched
+        across replicas: compiled chunk call k covers each replica's k-th
+        prefilling slot (replicas with fewer ride along as scratch-page
+        no-ops), so the dp mesh prefills all replicas in parallel."""
+        per_rep = [[b for b in self._rep_slots(r)
+                    if self.admissions[b] is not None
+                    and self.slot_state[b] == "prefill"]
+                   for r in range(self.R)]
+        for k in range(max((len(s) for s in per_rep), default=0)):
+            rows = [s[k] if k < len(s) else None for s in per_rep]
+            self._prefill_chunk_round(rows)
+
+    def _prefill_chunk_round(self, rows: List[Optional[int]]):
+        """One compiled chunk call: row r advances slot ``rows[r]`` (or is
+        a scratch no-op when None)."""
+        C = self.chunk
+        toks = np.zeros((self.R, C), np.int32)
+        starts = np.zeros(self.R, np.int32)
+        last_idx = np.zeros(self.R, np.int32)
+        bt = np.full((self.R, self.n_max_pages), SCRATCH_PAGE, np.int32)
+        prompts = {}
+        for r, b in enumerate(rows):
+            if b is None:
+                continue
+            req = self.admissions[b].req
+            prompt = effective_prompt(req)   # includes resumed output tokens
+            prompts[r] = (b, req, prompt)
+            L, c0 = len(prompt), int(self.prefill_done[b])
+            n = min(C, L - c0)
+            toks[r, :n] = prompt[c0:c0 + n]
+            starts[r] = c0
+            last_idx[r] = min(L - 1 - c0, C - 1)
+            bt[r] = self._bt_row(b)
         with self.mesh:
             logits, self.cache = self.prefill_fn(
-                self.params, self.cache, jnp.asarray(chunk_toks),
-                jnp.asarray(c0, jnp.int32), jnp.asarray(last_idx, jnp.int32),
-                jnp.asarray(self._bt_row(b)[None]))
-        self.prefill_done[b] = c0 + C
-        if c0 + C >= L:                  # prompt fully resident
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(starts), jnp.asarray(last_idx), jnp.asarray(bt))
+        logits_np = None
+        for r, (b, req, prompt) in prompts.items():
+            L = len(prompt)
+            self.prefill_done[b] = int(starts[r]) + C
+            if int(starts[r]) + C < L:
+                continue                     # more chunks to go
+            # prompt fully resident
+            if logits_np is None:
+                logits_np = np.asarray(
+                    jax.device_get(logits)).astype(np.float32)
             self.stats.prefills += 1
-            self.sched.on_prefill_complete(self.admissions[b])
-            logits = np.asarray(jax.device_get(logits)).astype(np.float32)
+            self.stats.replicas[r].prefills += 1
+            self.scheds[r].on_prefill_complete(self.admissions[b])
             # emit the token sampled from the final prompt position — the
             # first generated token (or, on resume, the next one: resumed
             # requests re-enter here with out_tokens non-empty, so TTFT is
             # not re-recorded)
             self.pos[b] = L
-            self._emit(b, req, self._sample_row(logits, 0, req),
+            self._emit(b, req, self._sample_row(logits_np, r, req),
                        time.monotonic())
             if self.admissions[b] is not None:   # not retired by that token
                 self.slot_state[b] = "decode"

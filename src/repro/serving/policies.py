@@ -19,9 +19,7 @@ from __future__ import annotations
 import collections
 from typing import List
 
-from repro.core.kvcache import pages_needed
-from repro.serving.scheduler import (Admission, FCFSScheduler,
-                                     effective_prompt, remaining_new_tokens)
+from repro.serving.scheduler import Admission, FCFSScheduler
 
 
 class PriorityScheduler(FCFSScheduler):
@@ -91,19 +89,6 @@ class PriorityScheduler(FCFSScheduler):
         req._sched_round = self._round
         self.queue.append(req)
 
-    def _admissible_without_eviction(self, req) -> bool:
-        """True if a free slot could actually serve ``req`` right now —
-        pool pages included.  A free slot whose pool is exhausted must not
-        suppress preemption: evicting a victim is what frees the pages."""
-        if not self.paged:
-            return True
-        need = pages_needed(len(effective_prompt(req)) +
-                            remaining_new_tokens(req), self.psz)
-        avail = self.allocator.n_free
-        if self.prefix_cache is not None:
-            avail += self.prefix_cache.n_evictable_pages
-        return avail >= need
-
     def plan_preemptions(self, active: List[Admission],
                          n_free: int) -> List[Admission]:
         if not self.preemption or not self.queue:
@@ -137,12 +122,29 @@ class FairScheduler(FCFSScheduler):
     tokens — its whole KV footprint).  Service therefore converges to an
     equal token share per client: a client flooding the queue only
     lengthens its own backlog, and a client with large requests is charged
-    proportionally more rounds per admission."""
+    proportionally more rounds per admission.
 
-    def __init__(self, *, quantum: int = 64, **kw):
+    With ``preemption=True`` DRR also preempts: plain DRR only rotates at
+    admission time, so once a client's long-running requests occupy every
+    slot, a newly arrived client waits out their full decode — unbounded
+    starvation.  A backlogged client with no running slot (and no free
+    slot that could serve it) instead accrues ``quantum`` deficit per tick,
+    and once its deficit exceeds a running client's by
+    ``preempt_after * quantum`` it evicts that client's most recently
+    admitted slot (least sunk work; preempted KV is donated to the prefix
+    cache, so nothing is recomputed on resume).  Admission then charges
+    the starved client's cost as usual, dropping it back below the
+    threshold — slots time-slice between contending clients at
+    ``preempt_after``-quantum granularity instead of ping-ponging."""
+
+    def __init__(self, *, quantum: int = 64, preemption: bool = False,
+                 preempt_after: int = 4, **kw):
         super().__init__(**kw)
         assert quantum > 0, quantum
+        assert preempt_after > 0, preempt_after
         self.quantum = quantum
+        self.preemption = preemption
+        self.preempt_after = preempt_after
         self._queues: dict = {}                       # client -> FIFO
         self._deficit: dict = {}
         self._rr: collections.deque = collections.deque()  # visit order
@@ -168,6 +170,47 @@ class FairScheduler(FCFSScheduler):
 
     def has_pending(self) -> bool:
         return any(self._queues.values())
+
+    def pending_requests(self) -> List:
+        return [r for q in self._queues.values() for r in q]
+
+    def plan_preemptions(self, active: List[Admission],
+                         n_free: int) -> List[Admission]:
+        """Preemptive DRR (see class docstring): starved clients accrue
+        deficit per tick and evict a running client once the gap exceeds
+        ``preempt_after * quantum``."""
+        if not self.preemption or not self.has_pending():
+            return []
+        running: dict = {}                 # client -> its active admissions
+        for a in active:
+            running.setdefault(self._client(a.req), []).append(a)
+        victims, spare = [], n_free
+        for c in sorted((c for c, q in self._queues.items()
+                         if q and c not in running),
+                        key=lambda c: -self._deficit.get(c, 0)):
+            if spare > 0 and self._admissible_without_eviction(
+                    self._queues[c][0]):
+                spare -= 1                 # a free slot serves it; no ev.
+                continue
+            # starvation clock: only waiting clients that nothing (free
+            # slot or running share) currently serves accrue credit
+            self._deficit[c] += self.quantum
+            # victim client: the most-served (lowest-deficit) running
+            # client; within it, the most recent admission (least sunk
+            # prefill/decode work, mirroring the priority policy)
+            pool = sorted(
+                ((self._deficit.get(rc, 0), rc) for rc, adms in
+                 running.items() if adms),
+                key=lambda t: t[0])
+            if not pool:
+                break
+            vdef, vc = pool[0]
+            if self._deficit[c] - vdef <= self.preempt_after * self.quantum:
+                continue
+            victim = max(running[vc], key=lambda a: a.seq)
+            running[vc].remove(victim)
+            victims.append(victim)
+        return victims
 
     def _select_next(self):
         if not self.has_pending():

@@ -1,0 +1,105 @@
+"""Request router for dp>1 serving: pick a replica for every request.
+
+With the page pool sharded over the data axes, each replica serves out of
+its own allocator / radix prefix cache / scheduler — state never crosses a
+replica boundary.  That makes placement a real decision: a request whose
+prefix is resident on replica 1 costs a full re-prefill anywhere else.
+The router resolves it with the classic two-level rule:
+
+1. **Prefix affinity** — route to the replica whose radix cache holds the
+   longest prefix of the request's effective prompt (so shared system
+   prompts, agent scaffolds, and preempted-and-resumed requests land where
+   their KV already lives).  Because routing happens at submit, a burst of
+   same-prefix requests would otherwise scatter before the first prefill
+   ever populates a cache — so affinity also scores against the prompts
+   *recently routed* to each replica (their KV is resident or about to
+   be).  A match shorter than one page is noise (no page is reusable) and
+   falls through.  Ties fall through to rule 2 among the tied replicas.
+2. **Least loaded** — otherwise, route to the replica with the lowest page
+   load: pages pinned by live slots (minus what eviction could reclaim)
+   plus the page demand of its queued backlog.  Ties break on the lowest
+   replica index (deterministic routing).
+
+Routing happens once, at submit, and is sticky: preemption donates pages
+to the *owning* replica's prefix cache and re-queues on the same replica's
+scheduler, so resume is a local prefix hit.  Affinity lookups take no page
+refs (``RadixPrefixCache.lookup`` is read-only apart from its LRU clock),
+so routing can never pin or leak pages.
+"""
+from __future__ import annotations
+
+import collections
+from typing import List, Optional
+
+from repro.serving.prefix_cache import _common_len
+from repro.serving.scheduler import effective_prompt
+
+
+class Router:
+    """Replica selector over parallel (scheduler, allocator, prefix-cache)
+    triples; ``route`` returns a replica index."""
+
+    def __init__(self, scheds: List, allocators: List,
+                 prefix_caches: List[Optional[object]], page_size: int,
+                 recent_window: int = 32):
+        assert len(scheds) == len(allocators) == len(prefix_caches)
+        self.scheds = scheds
+        self.allocators = allocators
+        self.prefix_caches = prefix_caches
+        self.psz = page_size
+        self.n_replicas = len(scheds)
+        self.affinity_routed = 0       # requests placed by prefix affinity
+        # prompts recently routed per replica: speculative affinity for
+        # bursts whose shared prefix hasn't finished prefilling anywhere yet
+        self._recent = [collections.deque(maxlen=recent_window)
+                        for _ in range(self.n_replicas)]
+
+    def page_load(self, r: int) -> int:
+        """Replica r's page pressure: pages held that eviction cannot
+        reclaim, plus the page demand of its queued backlog.  The backlog
+        term is a running counter on the scheduler (O(1), so load doesn't
+        rescan a growing queue per submit); the evictable-pages term walks
+        the replica's radix tree, bounded by its cached-page count."""
+        alloc = self.allocators[r]
+        held = alloc.n_pages - alloc.n_reserved - alloc.n_free
+        cache = self.prefix_caches[r]
+        if cache is not None:
+            held -= cache.n_evictable_pages
+        return held + self.scheds[r].backlog_pages
+
+    def affinity(self, req) -> List[int]:
+        """Per-replica affinity score: the longest cached prefix of the
+        request's effective prompt, or the longest common prefix with a
+        recently routed prompt (resident-or-soon KV), whichever is
+        longer."""
+        prompt = effective_prompt(req)
+        toks = [int(t) for t in prompt]
+        out = []
+        for c, recent in zip(self.prefix_caches, self._recent):
+            s = c.lookup(prompt)[0] if c is not None else 0
+            for q in recent:
+                if s >= len(toks):
+                    break
+                s = max(s, _common_len(q, toks))
+            out.append(s)
+        return out
+
+    def route(self, req) -> int:
+        """Pick a replica for ``req`` (no state change beyond LRU clocks);
+        call ``commit`` once the replica's scheduler accepted it."""
+        if self.n_replicas == 1:
+            return 0
+        hits = self.affinity(req)
+        best = max(hits)
+        if best >= self.psz:           # at least one full page reusable
+            cand = [r for r in range(self.n_replicas) if hits[r] == best]
+            self.affinity_routed += 1
+        else:
+            cand = list(range(self.n_replicas))
+        return min(cand, key=lambda rr: (self.page_load(rr), rr))
+
+    def commit(self, req, r: int) -> None:
+        """Record a successful placement: ``req``'s prompt joins replica
+        r's recent-routing window (rejected requests must not skew
+        affinity, so this is separate from ``route``)."""
+        self._recent[r].append([int(t) for t in effective_prompt(req)])

@@ -42,10 +42,16 @@ def sample_from_logits(logits: np.ndarray, cfg: SamplerConfig,
 
 def merged_topk_sample(local_logits_gathered, cfg, vocab_size, rng):
     """Exact sampling from per-shard top-k candidates (serving on a TP mesh):
-    the global top-k is a subset of the union of per-shard top-k's."""
+    the global top-k is a subset of the union of per-shard top-k's.
+
+    Applies the full ``SamplerConfig`` semantics — temperature, top-k AND
+    top-p — over the merged candidate set, consuming the request's RNG
+    stream exactly like ``sample_from_logits`` does on the single-host
+    path, so a TP mesh and a single host draw identical tokens from the
+    same seed."""
     vals, ids = local_logits_gathered                  # (tp*k,), (tp*k,)
     mask = ids < vocab_size
-    vals = np.where(mask, vals, -np.inf)
+    vals = np.where(mask, vals, -np.inf).astype(np.float64)
     if cfg.temperature <= 0:
         return int(ids[int(np.argmax(vals))])
     k = cfg.top_k or len(vals)
@@ -53,4 +59,19 @@ def merged_topk_sample(local_logits_gathered, cfg, vocab_size, rng):
     v = vals[order] / cfg.temperature
     p = np.exp(v - v.max())
     p /= p.sum()
-    return int(ids[order[int(rng.choice(len(order), p=p))]])
+    if cfg.top_p:
+        # nucleus filter over the merged candidates: `order` is already
+        # probability-descending, so the cumulative mask mirrors the
+        # single-host path token for token (which draws over sel in that
+        # same order)
+        keep = np.cumsum(p) - p < cfg.top_p
+        keep[0] = True
+        sel = order[keep]
+        pp = p[keep] / p[keep].sum()
+        return int(ids[sel[int(rng.choice(len(sel), p=pp))]])
+    # without top_p the single-host path draws over the FULL vocab in
+    # token-id order; zero-probability gaps don't shift the CDF, so
+    # drawing over the candidates sorted by token id consumes the same
+    # uniform identically
+    by_id = np.argsort(ids[order], kind="stable")
+    return int(ids[order[by_id][int(rng.choice(len(order), p=p[by_id]))]])

@@ -87,6 +87,11 @@ class Scheduler:
     def has_pending(self) -> bool:
         raise NotImplementedError
 
+    def pending_requests(self) -> List:
+        """Queued (not yet admitted) requests, in no particular order —
+        load introspection for the dp router (``serving.router``)."""
+        raise NotImplementedError
+
     def plan(self, free_slots: List[int]) -> List[Admission]:
         """Admissions for this tick; at most one per free slot."""
         raise NotImplementedError
@@ -132,6 +137,14 @@ class FCFSScheduler(Scheduler):
         self.stats = stats
         self._round = 0      # logical clock: one tick per plan() call
         self._adm_seq = 0    # admission order stamp
+        # page demand of the queued backlog, maintained at every
+        # enqueue/dequeue (submit / admission / put-back / requeue) so the
+        # dp router's load probe is O(1) instead of a queue scan
+        self.backlog_pages = 0
+        # per-replica counter block (engine-assigned for dp engines) —
+        # written at the SAME site as the global stats so the two hit
+        # rates cannot drift
+        self.replica_stats = None
 
     @property
     def paged(self) -> bool:
@@ -177,9 +190,35 @@ class FCFSScheduler(Scheduler):
                 f"request {req.rid} prompt ({len(req.prompt)} tokens) "
                 f"exceeds the sequence budget {self.seq_budget}")
         self._enqueue(req)
+        self.backlog_pages += self._req_pages(req)
 
     def has_pending(self) -> bool:
         return bool(self.queue)
+
+    def pending_requests(self) -> List:
+        return list(self.queue)
+
+    def _req_pages(self, req) -> int:
+        """Page demand of one queued request.  Constant while it waits
+        (out_tokens only grow while admitted), so the backlog counter's
+        add/subtract stay symmetric across put-backs and requeues."""
+        if not self.paged:
+            return 0
+        return pages_needed(len(effective_prompt(req)) +
+                            remaining_new_tokens(req), self.psz)
+
+    def _admissible_without_eviction(self, req) -> bool:
+        """True if a free slot could actually serve ``req`` right now —
+        pool pages included.  A free slot whose pool is exhausted must not
+        suppress preemption: evicting a victim is what frees the pages."""
+        if not self.paged:
+            return True
+        need = pages_needed(len(effective_prompt(req)) +
+                            remaining_new_tokens(req), self.psz)
+        avail = self.allocator.n_free
+        if self.prefix_cache is not None:
+            avail += self.prefix_cache.n_evictable_pages
+        return avail >= need
 
     # ---------------------------------------------------------- admission
     def plan(self, free_slots: List[int]) -> List[Admission]:
@@ -189,10 +228,12 @@ class FCFSScheduler(Scheduler):
             req = self._select_next()
             if req is None:
                 break
+            self.backlog_pages -= self._req_pages(req)
             if self.paged:
                 adm = self._plan_paged(slot, req)
                 if adm is None:     # blocked: wait for reclamation
                     self._put_back(req)
+                    self.backlog_pages += self._req_pages(req)
                     break
             else:
                 adm = Admission(slot=slot, req=req)
@@ -254,9 +295,11 @@ class FCFSScheduler(Scheduler):
             return None
         # count stats on admission only — a blocked head-of-line request is
         # re-planned every tick and must not inflate the hit rate
-        if self.stats is not None and self.prefix_cache is not None:
-            self.stats.prefix_lookups += 1
-            self.stats.prefix_hits += cached_len > 0
+        if self.prefix_cache is not None:
+            for st in (self.stats, self.replica_stats):
+                if st is not None:
+                    st.prefix_lookups += 1
+                    st.prefix_hits += cached_len > 0
         # fresh[0] sits at block-table index n_full: exactly where the COW
         # copy of the partial page belongs
         cow = (cow_src, fresh[0]) if cow_src is not None else None
@@ -295,3 +338,4 @@ class FCFSScheduler(Scheduler):
                         adm.pages[:n_full])
             self.allocator.decref(adm.pages)
         self._requeue_preempted(adm.req)
+        self.backlog_pages += self._req_pages(adm.req)

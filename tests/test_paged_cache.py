@@ -165,8 +165,8 @@ def test_paged_steps_match_contiguous_mixed_lengths(mesh1):
             for c0 in range(0, n_chunks * CHUNK, CHUNK):
                 lg, pcache = chunk_fn(
                     params, pcache, jnp.asarray(padded[None, c0:c0 + CHUNK]),
-                    jnp.asarray(c0, jnp.int32),
-                    jnp.asarray(min(L - 1 - c0, CHUNK - 1), jnp.int32),
+                    jnp.asarray([c0], jnp.int32),
+                    jnp.asarray([min(L - 1 - c0, CHUNK - 1)], jnp.int32),
                     jnp.asarray(bt))
         got_logits = [np.asarray(lg[0], np.float64)]
         tok, pos = int(np.argmax(got_logits[-1])), L

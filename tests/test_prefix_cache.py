@@ -136,11 +136,12 @@ def test_page_copy_step(mesh1):
     cache = jax.tree_util.tree_map(
         lambda x: jnp.asarray(rng.randn(*x.shape), x.dtype), cache)
     with mesh1:
-        out = copy_fn(cache, jnp.asarray(2, jnp.int32),
-                      jnp.asarray(5, jnp.int32))
+        out = copy_fn(cache, jnp.asarray([2], jnp.int32),
+                      jnp.asarray([5], jnp.int32))
     for old, new in zip(jax.tree_util.tree_leaves(cache),
                         jax.tree_util.tree_leaves(out)):
-        old, new = np.asarray(old), np.asarray(new)
+        # pools carry a leading replica dim: (reps, R, n_pages, G, psz, D)
+        old, new = np.asarray(old)[:, 0], np.asarray(new)[:, 0]
         np.testing.assert_array_equal(new[:, 5], old[:, 2])     # copied
         keep = [i for i in range(N_PAGES) if i != 5]
         np.testing.assert_array_equal(new[:, keep], old[:, keep])

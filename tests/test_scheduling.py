@@ -108,6 +108,56 @@ def test_fair_drr_charges_by_cost():
 
 
 # ---------------------------------------------------------------------------
+# fairness: preemptive DRR (a running client must not starve a waiting one)
+# ---------------------------------------------------------------------------
+
+def test_fair_drr_preempts_long_running_client():
+    """Client 0's long-running requests occupy every slot; client 1 arrives
+    and accrues deficit until it evicts client 0's most recent admission.
+    Without ``preemption=True`` the same setup never preempts (the ROADMAP
+    starvation bug)."""
+    for preemption in (True, False):
+        sched = FairScheduler(seq_budget=64, quantum=16, preemption=preemption,
+                              preempt_after=3)
+        for rid in range(4):               # client 0 floods both slots
+            sched.submit(_Req(rid, toks(*range(8)), max_new=8, client_id=0))
+        adms = sched.plan([0, 1])
+        assert [a.req.client_id for a in adms] == [0, 0]
+        sched.submit(_Req(10, toks(*range(8)), max_new=8, client_id=1))
+        victims = []
+        for _ in range(20):                # no free slots: decode-only ticks
+            victims = sched.plan_preemptions(adms, 0)
+            if victims:
+                break
+        if not preemption:
+            assert victims == []
+            continue
+        assert len(victims) == 1
+        victim = victims[0]
+        assert victim.req.client_id == 0
+        # the most recently admitted of client 0's slots: least sunk work
+        assert victim.seq == max(a.seq for a in adms)
+        sched.on_preempt(victim, effective_prompt(victim.req)[:0])
+        active = [a for a in adms if a is not victim]
+        (adm1,) = sched.plan([victim.slot])
+        assert adm1.req.client_id == 1     # the starved client gets the slot
+        # no immediate ping-pong: client 0 was just served and client 1's
+        # deficit was charged at admission, so the next tick evicts nobody
+        assert sched.plan_preemptions(active + [adm1], 0) == []
+
+
+def test_fair_drr_preemption_respects_free_slots():
+    """A usable free slot serves the waiting client without eviction."""
+    sched = FairScheduler(seq_budget=64, quantum=16, preemption=True,
+                          preempt_after=1)
+    sched.submit(_Req(0, toks(*range(8)), max_new=8, client_id=0))
+    (adm,) = sched.plan([0, 1])
+    sched.submit(_Req(1, toks(*range(8)), max_new=8, client_id=1))
+    for _ in range(10):                    # slot 1 stays free throughout
+        assert sched.plan_preemptions([adm], 1) == []
+
+
+# ---------------------------------------------------------------------------
 # preemption: victim choice, no ping-pong, page donation + resume-as-hit
 # ---------------------------------------------------------------------------
 
