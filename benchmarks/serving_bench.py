@@ -1,5 +1,7 @@
 """Serving throughput bench: contiguous vs paged vs paged+prefix-cache,
-plus a mixed-priority QoS scenario (FCFS vs preemptive priority).
+plus a mixed-priority QoS scenario (FCFS vs preemptive priority), a
+dp-scaling scenario, and a hybrid-arch (attention+SSM slab) row whose
+outputs are asserted token-identical to the contiguous oracle.
 
 Drives the full ServingEngine on a shared-system-prompt workload (every
 request = common prefix + unique suffix — the traffic shape the radix
@@ -161,6 +163,57 @@ def run_priority_mode(mode, cfg, plan, mesh, params, sz):
     return row, outputs
 
 
+def run_hybrid_mode(plan, mesh, sz):
+    """Hybrid-arch (attention + SSM) paged serving row: the engine serves
+    a reduced hymba config out of KV pages + recurrent-state slabs, and
+    greedy outputs are asserted token-identical to the contiguous oracle
+    (the acceptance bar for SSM slab paging).  -> row dict ("hybrid")."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.configs.base import ShapeConfig
+    from repro.core import model, steps
+    from repro.serving import Request, ServingEngine
+
+    cfg = reduced(get_config("hymba-1.5b"), dtype="float32")
+    params = model.init_params(cfg, plan)
+    rng = np.random.RandomState(5)
+    base = [(rng.randint(2, cfg.vocab_size,
+                         int(rng.randint(4, sz["prefix"]))).astype(np.int32),
+             sz["max_new"]) for _ in range(sz["requests"])]
+
+    dshape = ShapeConfig("hb_d", "decode", sz["seq_budget"], sz["slots"])
+    pshape = ShapeConfig("hb_p", "decode", sz["seq_budget"], 1)
+    dec, _, _ = steps.make_decode_step(cfg, plan, mesh, dshape)
+    pre, _, _ = steps.make_prefill_step(cfg, plan, mesh, pshape)
+    oracle = ServingEngine(cfg, plan, mesh, sz["slots"], sz["seq_budget"],
+                           params, jax.jit(pre), jax.jit(dec))
+    refs = [Request(rid=i, prompt=p.copy(), max_new_tokens=m)
+            for i, (p, m) in enumerate(base)]
+    for r in refs:
+        oracle.submit(r)
+    oracle.run(max_ticks=50_000)
+    ref_out = {r.rid: tuple(r.out_tokens) for r in refs}
+
+    eng = ServingEngine.build_paged(
+        cfg, plan, mesh, sz["slots"], sz["seq_budget"], params,
+        page_size=sz["page_size"], prefill_chunk=sz["chunk"])
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=m)
+            for i, (p, m) in enumerate(base)]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    stats = eng.run(max_ticks=50_000)
+    dt = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    assert {r.rid: tuple(r.out_tokens) for r in reqs} == ref_out, \
+        "hybrid paged outputs diverged from the contiguous oracle"
+    # slab + page leak-freedom at completion
+    a = eng.allocators[0]
+    assert a.n_free == a.n_pages - a.n_reserved
+    assert eng.slab_allocators[0].n_free == eng.n_slabs - 1
+    return _stats_row("hybrid", eng, stats, dt, sz["requests"])
+
+
 def run_dp_mode(dp, cfg, plan, mesh, params, sz):
     """dp-scaling scenario: two tenant groups, each sharing its own system
     prompt.  With dp=2 the router splits the tenants across replicas by
@@ -253,7 +306,11 @@ def rows(smoke: bool = False):
           f"(replica hit rates {dp2_row['prefix_hit_rate_r0']:.2f}/"
           f"{dp2_row['prefix_hit_rate_r1']:.2f}, "
           f"{dp2_row['affinity_routed']} affinity-routed)")
-    return out + [fcfs_row, pre_row, dp1_row, dp2_row]
+    # hybrid (attention + SSM slabs) paged serving, oracle-checked
+    hybrid_row = run_hybrid_mode(plan, mesh, sz)
+    print(f"# hybrid arch: {hybrid_row['tokens_per_s']:.1f} tok/s "
+          f"(outputs oracle-identical, slabs leak-free)")
+    return out + [fcfs_row, pre_row, dp1_row, dp2_row, hybrid_row]
 
 
 def main(smoke=False, json_path=None):

@@ -1,0 +1,78 @@
+"""Docs-freshness gate (CI): keep the prose tethered to the tree.
+
+Checks, stdlib-only so it runs before any jax install:
+
+1. Every internal (non-URL) markdown link in ARCHITECTURE.md, README.md
+   and ROADMAP.md resolves to a real file or directory in the repo.
+2. Every module under src/repro/serving/ has a non-empty module
+   docstring — the serving layer documents its invariants at the top of
+   each file, not only in tests.
+
+    python scripts/check_docs.py            # from the repo root
+
+Exit code 0 = clean; 1 = stale docs, with one line per violation.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["ARCHITECTURE.md", "README.md", "ROADMAP.md"]
+DOCSTRING_GLOBS = [os.path.join("src", "repro", "serving")]
+
+# [text](target) — ignore images; fragments/URLs filtered below
+_LINK = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def check_links(errors):
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            errors.append(f"{doc}: file missing")
+            continue
+        text = open(path, encoding="utf-8").read()
+        for target in _LINK.findall(text):
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.join(ROOT, rel)):
+                errors.append(f"{doc}: broken internal link -> {target}")
+
+
+def check_docstrings(errors):
+    for base in DOCSTRING_GLOBS:
+        d = os.path.join(ROOT, base)
+        for name in sorted(os.listdir(d)):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(d, name)
+            try:
+                tree = ast.parse(open(path, encoding="utf-8").read())
+            except SyntaxError as e:
+                errors.append(f"{base}/{name}: unparseable ({e})")
+                continue
+            doc = ast.get_docstring(tree)
+            if not doc or not doc.strip():
+                errors.append(f"{base}/{name}: empty module docstring")
+
+
+def main():
+    errors = []
+    check_links(errors)
+    check_docstrings(errors)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)", file=sys.stderr)
+        return 1
+    print("check_docs: links resolve, serving docstrings present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

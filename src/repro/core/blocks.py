@@ -151,8 +151,16 @@ def attn_mixer(xn, pa, cfg, plan, lay, spec, mode, kv_cache, positions, pos,
                       _lo(pa["wo"]).reshape(hl.hq_loc * d, E)), new_cache
 
 
-def cross_attn_mixer(xn, pa, cfg, plan, lay, mode, cross_cache, enc_memory):
-    """Cross-attention: q from x, kv from encoder memory (or cross cache)."""
+def cross_attn_mixer(xn, pa, cfg, plan, lay, mode, cross_cache, enc_memory,
+                     pages=None):
+    """Cross-attention: q from x, kv from encoder memory (or cross cache).
+
+    Paged path (``cross_cache`` holds ``ckp``/``cvp`` pools): K/V were
+    written once at admission by ``steps.make_cross_kv_write_step`` and are
+    READ-ONLY here — both decode and chunked prefill gather them through
+    the slot's cross block table (``pages["cross_block_table"]``) and slice
+    to the static encoder length, so shared cross pages are never written.
+    """
     B, S, E = xn.shape
     hl = lay.attn
     d = cfg.head_dim_
@@ -160,6 +168,26 @@ def cross_attn_mixer(xn, pa, cfg, plan, lay, mode, cross_cache, enc_memory):
     if cfg.qk_norm:
         q = rmsnorm(q, pa["q_norm"], cfg.norm_eps)
     qg = _group_q(q, lay)
+    if cross_cache is not None and "ckp" in cross_cache:   # paged, read-only
+        cbt = pages["cross_block_table"]
+        S_enc = cfg.enc_seq_len
+        kg = gather_pages(_kv_dq(cross_cache["ckp"], qg.dtype),
+                          cbt)[:, :, :S_enc]
+        vg = gather_pages(_kv_dq(cross_cache["cvp"], qg.dtype),
+                          cbt)[:, :, :S_enc]
+        if mode == "decode":
+            out = decode_attention(
+                qg[:, :, :, 0], kg, vg,
+                jnp.broadcast_to(jnp.arange(S_enc), (B, S_enc)),
+                jnp.full((B,), S_enc, jnp.int32), window=0,
+                scale=cfg.attn_scale)
+            out = out[:, :, :, None, :]
+        else:
+            out = flash_attention(qg, kg, vg, causal=False, window=0,
+                                  scale=cfg.attn_scale)
+        o = _ungroup(out, lay)
+        return jnp.einsum("bsx,xe->bse", o,
+                          _lo(pa["wo"]).reshape(hl.hq_loc * d, E)), None
     if mode == "decode":
         kg = cross_cache["k"].astype(qg.dtype)
         vg = cross_cache["v"].astype(qg.dtype)
@@ -322,12 +350,21 @@ def _cp_state_prefix(C_loc, D_loc, plan):
     return jnp.take(jnp.stack(prefixes), me, axis=0), running
 
 
-def ssm_mixer(xn, ps, cfg, plan, lay, mode, ssm_cache):
-    """-> (partial_out (B,S,E), new_cache).  Heads sharded on model axis."""
+def ssm_mixer(xn, ps, cfg, plan, lay, mode, ssm_cache, chunk_last_idx=None):
+    """-> (partial_out (B,S,E), new_cache).  Heads sharded on model axis.
+
+    ``chunk_last_idx`` enables the *chunked-prefill-with-carried-state*
+    path (paged serving): the conv tails and SSD state in ``ssm_cache``
+    are the running state after the previous chunk, and positions past
+    ``chunk_last_idx`` (zero-padding beyond the prompt's end) must not
+    touch the recurrence — their dt is zeroed (decay 1, contribution 0)
+    and the conv tail is sliced at the last valid row, so the state handed
+    to the next chunk/decode step is exact."""
     B, S, E = xn.shape
     H = lay.ssm.hq_loc
     Pd = cfg.ssm_head_dim
-    cp = bool(plan.cp_axes) and mode != "decode" and \
+    chunked = chunk_last_idx is not None
+    cp = bool(plan.cp_axes) and mode != "decode" and not chunked and \
         cc.axis_size(plan.cp_axes) > 1
     z = jnp.einsum("bse,ehp->bshp", xn, _lo(ps["in_z"]))         # (B,S,H,P)
     xi = jnp.einsum("bse,ehp->bshp", xn, _lo(ps["in_x"]))
@@ -342,6 +379,14 @@ def ssm_mixer(xn, ps, cfg, plan, lay, mode, ssm_cache):
                                      ssm_cache["conv_x"])
         Bm, cs_B = ssd.causal_conv(Bm, ps["conv_B"], ssm_cache["conv_B"])
         Cm, cs_C = ssd.causal_conv(Cm, ps["conv_C"], ssm_cache["conv_C"])
+    elif chunked:
+        xi_f, cs_x = ssd.causal_conv(xi_f, _lo(ps["conv_x"]).reshape(H * Pd, -1),
+                                     ssm_cache["conv_x"],
+                                     tail_idx=chunk_last_idx)
+        Bm, cs_B = ssd.causal_conv(Bm, ps["conv_B"], ssm_cache["conv_B"],
+                                   tail_idx=chunk_last_idx)
+        Cm, cs_C = ssd.causal_conv(Cm, ps["conv_C"], ssm_cache["conv_C"],
+                                   tail_idx=chunk_last_idx)
     elif cp:
         # conv halo: previous shard's last K-1 pre-conv rows
         xi_f, cs_x = ssd.causal_conv(xi_f, _lo(ps["conv_x"]).reshape(H * Pd, -1),
@@ -363,6 +408,15 @@ def ssm_mixer(xn, ps, cfg, plan, lay, mode, ssm_cache):
         y, state = ssd.ssd_decode_step(xi[:, 0], dt[:, 0], Bm[:, 0], Cm[:, 0],
                                        A, D, ssm_cache["state"])
         y = y[:, None]                                           # (B,1,H,P)
+        new_cache = {"state": state, "conv_x": cs_x, "conv_B": cs_B,
+                     "conv_C": cs_C}
+    elif chunked:
+        # padding past the prompt must not advance the recurrence: dt = 0
+        # makes a padded position's decay exp(0) = 1 and contribution 0
+        dt = jnp.where(jnp.arange(S)[None, :, None] <= chunk_last_idx,
+                       dt, 0.0)
+        y, state = ssd.ssd_chunked(xi, dt, Bm, Cm, A, D, cfg.ssm_chunk,
+                                   state0=ssm_cache["state"])
         new_cache = {"state": state, "conv_x": cs_x, "conv_B": cs_B,
                      "conv_C": cs_C}
     elif cp:
@@ -401,6 +455,28 @@ def ssm_mixer(xn, ps, cfg, plan, lay, mode, ssm_cache):
     out = jnp.einsum("bsx,xe->bse", g.astype(xn.dtype),
                      _lo(ps["out"]).reshape(H * Pd, E))
     return out, new_cache
+
+
+def _paged_ssm(xn, ps, cfg, plan, lay, mode, slab_pool, pages):
+    """SSM mixer against the slab pools (paged serving).
+
+    slab_pool: {"statep","conv_xp","conv_Bp","conv_Cp"} with a leading
+    ``n_slabs`` dim; pages["slab_ids"]: (B,) slab id per batch row.  Each
+    row gathers its slab into the per-slot view ``ssm_mixer`` expects,
+    runs one decode token or one prefill chunk with carried state, and
+    scatters the updated state back.  Idle/prefilling decode lanes point
+    at the reserved scratch slab (id 0), so full-batch decode never
+    corrupts a live slab."""
+    sid = pages["slab_ids"]
+    view = {"state": slab_pool["statep"][sid],
+            "conv_x": slab_pool["conv_xp"][sid],
+            "conv_B": slab_pool["conv_Bp"][sid],
+            "conv_C": slab_pool["conv_Cp"][sid]}
+    out, new = ssm_mixer(xn, ps, cfg, plan, lay, mode, view,
+                         chunk_last_idx=(pages.get("last_idx")
+                                         if mode != "decode" else None))
+    return out, {k + "p": slab_pool[k + "p"].at[sid].set(
+        v.astype(slab_pool[k + "p"].dtype)) for k, v in new.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -443,6 +519,12 @@ def layer_forward(x, p, cache, cfg, plan, lay, spec, mode, positions,
     cache = cache or {}
     new_cache = dict(cache)
 
+    def run_ssm(h):
+        sc = cache.get("ssm")
+        if sc is not None and "statep" in sc:      # slab pools (paged)
+            return _paged_ssm(h, p["ssm"], cfg, plan, lay, mode, sc, pages)
+        return ssm_mixer(h, p["ssm"], cfg, plan, lay, mode, sc)
+
     # ---- mixer sublayer ----------------------------------------------------
     h = apply_norm(x, p["ln1"], cfg)
     if spec.mixer == MIX_ATTN:
@@ -451,15 +533,13 @@ def layer_forward(x, p, cache, cfg, plan, lay, spec, mode, positions,
         if nkv is not None:
             new_cache["kv"] = nkv
     elif spec.mixer == MIX_SSM:
-        partial, nssm = ssm_mixer(h, p["ssm"], cfg, plan, lay, mode,
-                                  cache.get("ssm"))
+        partial, nssm = run_ssm(h)
         if nssm is not None:
             new_cache["ssm"] = nssm
     else:  # hybrid: parallel attn + ssm heads, fused before ONE psum
         pa, nkv = attn_mixer(h, p["attn"], cfg, plan, lay, spec, mode,
                              cache.get("kv"), positions, pos, pages)
-        ps_, nssm = ssm_mixer(h, p["ssm"], cfg, plan, lay, mode,
-                              cache.get("ssm"))
+        ps_, nssm = run_ssm(h)
         partial = 0.5 * (pa + ps_)
         if nkv is not None:
             new_cache["kv"] = nkv
@@ -474,7 +554,8 @@ def layer_forward(x, p, cache, cfg, plan, lay, spec, mode, positions,
     if spec.cross_attn:
         h = apply_norm(x, p["ln_x"], cfg)
         partial, ncross = cross_attn_mixer(h, p["xattn"], cfg, plan, lay,
-                                           mode, cache.get("cross"), enc_memory)
+                                           mode, cache.get("cross"),
+                                           enc_memory, pages)
         if ncross is not None:
             new_cache["cross"] = ncross
         x = x + cc.psum(partial, plan.tp_axes, "block/xattn")

@@ -13,6 +13,24 @@ sharded on the model axis, mirroring the weight convention:
 For ``plan.seq_shard_kv`` (long-context decode) the W dim is additionally
 sharded over the data axes — each data shard holds a contiguous slice of the
 sequence and attention merges partials via LSE psums (attention.py).
+
+Paged-serving invariants (the block-pool layouts further down):
+
+* **One static allocation** — every pool/slab is a fixed array whose
+  placement never changes; request lengths appear only as data (block
+  tables, positions, slab ids), never as shapes.
+* **Page 0 / slab 0 are scratch** — idle decode lanes point their block
+  tables (and slab ids) at the reserved index so the fused decode step
+  always runs full-batch; scratch contents are garbage by convention and
+  must never be read back.
+* **Refcounts own pages** — a page returns to the free list exactly when
+  its last reference drops (slot block-table entries, radix-prefix-cache
+  nodes and cross-KV cache entries each hold one ref per page).  Shared
+  pages are immutable; divergence goes through a copy-on-write duplicate.
+* **Slabs are exclusive** — recurrent SSM state cannot be shared or
+  re-derived from pages, so a slab has exactly one owner, is zeroed on
+  allocation, and is snapshot/restored through the engine's host-side
+  stash across preemption (``serving.engine``).
 """
 from __future__ import annotations
 
@@ -153,25 +171,51 @@ def _map_tmpl(tmpl, fn):
 # full-batch without masking writes.
 
 SCRATCH_PAGE = 0
+SCRATCH_SLAB = 0
+
+
+def cache_profile(cfg) -> set:
+    """Union of decode-cache kinds across the decoder stack:
+    subset of {"kv", "ssm", "cross_kv"}."""
+    kinds = set()
+    for spec in cfg.layer_specs():
+        kinds.update(spec.cache_kinds())
+    return kinds
 
 
 def paged_cache_supported(cfg) -> tuple:
-    """-> (ok, reason).  Paged serving covers attention-only decoders."""
-    if cfg.is_encdec:
-        return False, "enc-dec cross-attention cache is not paged"
-    for spec in cfg.layer_specs():
-        kinds = spec.cache_kinds()
-        if kinds != ["kv"]:
-            return False, f"layer cache kinds {kinds} != ['kv'] (ssm/hybrid)"
+    """-> (ok, reason).  Paged serving covers every decode-capable arch
+    whose serving inputs are tokens (+ encoder frames): attention-only and
+    hybrid/SSM decoders page (or slab) their self state, and enc-dec
+    decoders page the encoder memory's cross-KV."""
+    if cfg.is_encoder_only:
+        return False, "encoder-only arch has no decode path to serve"
+    if cfg.frontend == "vision_patches":
+        return False, ("vision frontend needs image-embed injection at "
+                       "prefill; the token-only chunked prefill step "
+                       "cannot carry it")
     return True, ""
 
 
 def paged_cache_template(cfg, plan, lay, n_pages: int, page_size: int,
-                         n_replicas: int = 1):
+                         n_replicas: int = 1, n_slabs: int = 0):
     """Full paged cache template: list (per layer group) of stacked pools.
 
+    Per layer, by cache kind:
+
+    * ``kv``    — ``kp``/``vp`` page pools (block-table indirection),
+    * ``ssm``   — ``statep``/``conv_xp``/``conv_Bp``/``conv_Cp`` slab
+      pools: ``n_slabs`` rows of per-request recurrent state, read/written
+      by slot-relative slab id (no paging — SSD state is O(1) per request
+      and cannot be shared),
+    * ``cross_kv`` — ``ckp``/``cvp`` page pools holding the encoder
+      memory's K/V.  Cross pages share the self-KV page-id space (one
+      allocator covers both) and are immutable after the encode-time
+      write, so they are shared by refcount alone — no copy-on-write.
+
     ``n_replicas`` adds a leading replica dim sharded over ``plan.dp_axes``
-    — each data shard stores only its replicas' pages (dp>1 serving)."""
+    — each data shard stores only its replicas' pages/slabs (dp>1
+    serving)."""
     ok, why = paged_cache_supported(cfg)
     if not ok:
         raise ValueError(f"paged cache unsupported for {cfg.name}: {why}")
@@ -182,10 +226,34 @@ def paged_cache_template(cfg, plan, lay, n_pages: int, page_size: int,
     dpax = tuple(plan.dp_axes)
     pool = ((n_replicas, n_pages, plan.tp * lay.attn.n_kv_loc, page_size, d),
             kvd, P(dpax, None, tpax, None, None))
+    slab = None
+    if "ssm" in cache_profile(cfg):
+        assert n_slabs > 1, f"ssm layers need n_slabs > 1, got {n_slabs}"
+        H, Pdim, N = lay.ssm.hq_loc, cfg.ssm_head_dim, cfg.ssm_state
+        K = cfg.ssm_conv
+        slab = {
+            "statep": ((n_replicas, n_slabs, plan.tp * H, Pdim, N),
+                       jnp.float32, P(dpax, None, tpax, None, None)),
+            "conv_xp": ((n_replicas, n_slabs, K - 1, plan.tp * H * Pdim),
+                        jnp.dtype(cfg.dtype), P(dpax, None, None, tpax)),
+            "conv_Bp": ((n_replicas, n_slabs, K - 1, N), jnp.dtype(cfg.dtype),
+                        P(dpax, None, None, None)),
+            "conv_Cp": ((n_replicas, n_slabs, K - 1, N), jnp.dtype(cfg.dtype),
+                        P(dpax, None, None, None)),
+        }
     tmpl = []
     for g in cfg.layer_groups():
-        per_pattern = [_stack_template({"kv": {"kp": pool, "vp": pool}},
-                                       g.n_reps) for _ in g.pattern]
+        per_pattern = []
+        for spec in g.pattern:
+            kinds = spec.cache_kinds()
+            t = {}
+            if "kv" in kinds:
+                t["kv"] = {"kp": pool, "vp": pool}
+            if "ssm" in kinds:
+                t["ssm"] = dict(slab)
+            if "cross_kv" in kinds:
+                t["cross"] = {"ckp": pool, "cvp": pool}
+            per_pattern.append(_stack_template(t, g.n_reps))
         tmpl.append(per_pattern)
     return tmpl
 
@@ -285,6 +353,41 @@ class PageAllocator:
                 f"free() of shared page {p} (refcount {self._rc[p]}); " \
                 f"multi-ref releases must go through decref()"
         self.decref(pages)
+
+
+class SlabAllocator:
+    """Host-side free-list allocator for SSM state slabs (slab 0 scratch).
+
+    A slab holds one request's recurrent state (SSD ``state`` plus conv
+    tails) across every SSM/hybrid layer.  Unlike pages, slabs are never
+    shared — recurrent state has exactly one owner and cannot be re-derived
+    from donated pages — so there are no refcounts: ``alloc`` hands out one
+    slab id (or None when exhausted, for all-or-nothing admission) and
+    ``free`` returns it.  The engine zeroes a slab at allocation and
+    snapshot/restores it through a host-side stash across preemption."""
+
+    def __init__(self, n_slabs: int, n_reserved: int = 1):
+        assert n_slabs > n_reserved, (n_slabs, n_reserved)
+        self.n_slabs = n_slabs
+        self.n_reserved = n_reserved
+        self._free = list(range(n_slabs - 1, n_reserved - 1, -1))
+        self.total_allocated = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self):
+        """-> one slab id, or None when the pool is exhausted."""
+        if not self._free:
+            return None
+        self.total_allocated += 1
+        return self._free.pop()
+
+    def free(self, slab: int):
+        assert slab >= self.n_reserved, f"freeing reserved slab {slab}"
+        assert slab not in self._free, f"double free of slab {slab}"
+        self._free.append(slab)
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:

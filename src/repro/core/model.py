@@ -487,6 +487,37 @@ def encode(params, frames, cfg, plan, lay):
     return apply_norm(x, params["encoder"]["final_norm"], cfg)
 
 
+def forward_cross_kv(params, enc_memory, cfg, plan, lay):
+    """Every cross-attention layer's K/V of the encoder memory.
+
+    -> list aligned with ``cfg.layer_groups()``: per group, per pattern
+    entry, either None (no cross-attention) or ``{"k", "v"}`` of shape
+    (reps, B, G, S_enc, D) — the grouped-GQA layout ``cross_attn_mixer``
+    attends over.  Computed once per encode; the paged serving path
+    scatters these into the cross page pools
+    (``steps.make_cross_kv_write_step``), after which they are immutable.
+    """
+    from repro.core.layers import rmsnorm
+
+    def one_layer(pa):
+        k = jnp.einsum("bse,ehd->bshd", enc_memory, _lo(pa["wk"]))
+        v = jnp.einsum("bse,ehd->bshd", enc_memory, _lo(pa["wv"]))
+        if cfg.qk_norm:
+            k = rmsnorm(k, pa["k_norm"], cfg.norm_eps)
+        return {"k": k.swapaxes(1, 2), "v": v.swapaxes(1, 2)}
+
+    out = []
+    for group, gparams in zip(cfg.layer_groups(), params["stacks"]):
+        per_pat = []
+        for pi, spec in enumerate(group.pattern):
+            if not spec.cross_attn:
+                per_pat.append(None)
+                continue
+            per_pat.append(jax.vmap(one_layer)(gparams[pi]["xattn"]))
+        out.append(per_pat)
+    return out
+
+
 def _cp_positions(B, S, plan):
     """Absolute positions for this shard's sequence slice (context parallel:
     the local S is a contiguous slice at offset cp_index * S)."""

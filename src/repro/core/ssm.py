@@ -19,9 +19,13 @@ import jax
 import jax.numpy as jnp
 
 
-def causal_conv(x, w, state=None):
+def causal_conv(x, w, state=None, tail_idx=None):
     """Depthwise causal conv.  x: (B, S, C), w: (C, K).
     state: (B, K-1, C) previous inputs (decode) or None (prefill).
+    tail_idx: scalar index of the last *valid* input row — the returned
+    state is the K-1 inputs ending there (inclusive), so a chunk whose
+    tail is padding (chunked prefill past the prompt's end) still hands
+    the next step the true conv history.  None = S - 1 (all rows valid).
     Returns (y, new_state)."""
     B, S, C = x.shape
     K = w.shape[1]
@@ -30,7 +34,15 @@ def causal_conv(x, w, state=None):
     else:
         xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
     y = sum(xp[:, i:i + S, :] * w[:, i].astype(x.dtype) for i in range(K))
-    new_state = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros((B, 0, C), x.dtype)
+    if K == 1:
+        return y, jnp.zeros((B, 0, C), x.dtype)
+    if tail_idx is None:
+        new_state = xp[:, -(K - 1):, :]
+    else:
+        # input row s sits at xp index K-1+s; the K-1 rows ending at
+        # tail_idx inclusive are xp[tail_idx+1 : tail_idx+K]
+        new_state = jax.lax.dynamic_slice_in_dim(xp, tail_idx + 1, K - 1,
+                                                 axis=1)
     return y, new_state
 
 

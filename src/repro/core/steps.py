@@ -401,7 +401,10 @@ def serve_templates(cfg, plan, shape: ShapeConfig, mesh):
         "prompt": P(bt, cp),
     }
     if cfg.is_encdec:
-        t["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        # frames span the ENCODER memory length (cfg.enc_seq_len) so the
+        # cross cache the prefill writes matches the decode-step template
+        t["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq_len, cfg.d_model),
+                                           jnp.bfloat16)
         s["frames"] = P(bt, None, None)
         t["dec_tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
         s["dec_tokens"] = P(bt, None)
@@ -487,13 +490,31 @@ def zero_cache_for(cfg, plan, mesh, batch, budget):
 # into one larger pool and offsets table rows by ``local_replica *
 # n_pages``, so attention and the Pallas kernels never see the replica dim,
 # and n_replicas == 1 reproduces the old dp=1 behavior exactly.
+#
+# Architecture coverage: attention layers read/write ``kp``/``vp`` page
+# pools through block tables; SSM/hybrid layers read/write their
+# ``n_slabs`` recurrent-state slab pools by slab id (``slab_ids`` input,
+# scratch slab 0 for idle lanes); enc-dec decoders read the encoder
+# memory's K/V through a SECOND, read-only block table
+# (``cross_block_table``) over the ``ckp``/``cvp`` pools, written once per
+# admission by ``make_cross_kv_write_step``.  Each step's input signature
+# grows only the pieces the arch needs (``paged_extra_inputs``).
 
-def _paged_templates(cfg, plan, mesh, n_pages, page_size, n_replicas=1):
+
+def paged_extra_inputs(cfg) -> tuple:
+    """-> (has_ssm, has_cross): which extra inputs (slab_ids /
+    cross_block_table) the arch's paged steps take, in that order."""
+    prof = kvcache.cache_profile(cfg)
+    return "ssm" in prof, "cross_kv" in prof
+
+
+def _paged_templates(cfg, plan, mesh, n_pages, page_size, n_replicas=1,
+                     n_slabs=0):
     assert not plan.seq_shard_kv, "paged cache is exclusive with seq_shard_kv"
     prepare_ledger(mesh)
     lay = model_layout(cfg, plan)
     tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size,
-                                        n_replicas)
+                                        n_replicas, n_slabs)
     return lay, kvcache.abstract_cache(tmpl), kvcache.cache_pspecs(tmpl)
 
 
@@ -509,26 +530,38 @@ def n_replicas_local(mesh, plan, n_replicas: int) -> int:
 
 def make_paged_decode_step(cfg, plan, mesh, batch: int, n_pages: int,
                            page_size: int, n_max_pages: int,
-                           n_replicas: int = 1):
+                           n_replicas: int = 1, n_slabs: int = 0):
     """-> (decode_fn(params, cache, tokens (R*B,1), pos (R*B,), block_table
-    (R*B, n_max)) -> (logits, cache), templates, specs).
+    (R*B, n_max)[, slab_ids (R*B,)][, cross_block_table (R*B, n_cross)])
+    -> (logits, cache), templates, specs).
 
     ``batch`` is the per-replica slot count; the global decode batch covers
     all ``n_replicas`` replicas' slots (rows r*B..r*B+B-1 belong to replica
     r) and is sharded over the data axes alongside the pools, so one
-    compiled step drives every replica."""
+    compiled step drives every replica.  Archs with SSM layers take the
+    ``slab_ids`` input (replica-relative, scratch 0 for idle lanes);
+    enc-dec archs take the read-only ``cross_block_table``
+    (``paged_extra_inputs`` says which apply)."""
+    has_ssm, has_cross = paged_extra_inputs(cfg)
     lay, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
-                                             page_size, n_replicas)
+                                             page_size, n_replicas, n_slabs)
     pspecs = model.param_pspecs(cfg, plan)
     r_loc = n_replicas_local(mesh, plan, n_replicas)
     bt_ax = batch_axes(plan)
+    n_cross = kvcache.pages_needed(cfg.enc_seq_len, page_size) \
+        if has_cross else 0
 
-    def per_shard(params, cache, tokens, pos, block_table):
+    def per_shard(params, cache, tokens, pos, block_table, *extra):
         # fold this shard's replicas into one pool; rows stay
         # replica-relative, so offset each row into its replica's range
-        offs = (jnp.arange(r_loc * batch, dtype=jnp.int32)
-                // batch)[:, None] * n_pages
+        rep_row = jnp.arange(r_loc * batch, dtype=jnp.int32) // batch
+        offs = rep_row[:, None] * n_pages
         pages = {"block_table": block_table + offs, "page_size": page_size}
+        extra = list(extra)
+        if has_ssm:
+            pages["slab_ids"] = extra.pop(0) + rep_row * n_slabs
+        if has_cross:
+            pages["cross_block_table"] = extra.pop(0) + offs
         logits, folded = model.forward_decode(
             params, kvcache.fold_replica_pools(cache), tokens, pos, cfg,
             plan, lay, pages=pages)
@@ -541,36 +574,64 @@ def make_paged_decode_step(cfg, plan, mesh, batch: int, n_pages: int,
          "pos": jax.ShapeDtypeStruct((n_replicas * batch,), jnp.int32),
          "block_table": jax.ShapeDtypeStruct(
              (n_replicas * batch, n_max_pages), jnp.int32)}
+    extra_s = []
+    if has_ssm:
+        s["slab_ids"] = P(bt_ax)
+        t["slab_ids"] = jax.ShapeDtypeStruct((n_replicas * batch,), jnp.int32)
+        extra_s.append(s["slab_ids"])
+    if has_cross:
+        s["cross_block_table"] = P(bt_ax, None)
+        t["cross_block_table"] = jax.ShapeDtypeStruct(
+            (n_replicas * batch, n_cross), jnp.int32)
+        extra_s.append(s["cross_block_table"])
     fn = _shard_map(per_shard, mesh,
                     in_specs=(pspecs, s["cache"], s["tokens1"], s["pos"],
-                              s["block_table"]),
+                              s["block_table"], *extra_s),
                     out_specs=(P(bt_ax, "model"), s["cache"]))
     return fn, t, s
 
 
 def make_prefill_chunk_step(cfg, plan, mesh, chunk: int, n_pages: int,
                             page_size: int, n_max_pages: int,
-                            n_replicas: int = 1):
+                            n_replicas: int = 1, n_slabs: int = 0):
     """-> (chunk_fn(params, cache, tokens (R,C), chunk_start (R,), last_idx
-    (R,), block_table (R, n_max)) -> (logits (R, V), cache), templates,
-    specs).
+    (R,), block_table (R, n_max)[, slab_ids (R,)][, cross_block_table
+    (R, n_cross)]) -> (logits (R, V), cache), templates, specs).
 
     Row r advances one prefill chunk for replica r; a replica with nothing
     to prefill rides along pointed at its scratch page (all-SCRATCH_PAGE
     block-table row, zero tokens) and its logits row is ignored.  On a dp
-    mesh each shard runs only its own replicas' chunks in parallel."""
+    mesh each shard runs only its own replicas' chunks in parallel.
+
+    SSM layers carry their recurrent state across chunks through the slab
+    (``slab_ids``); ``last_idx`` doubles as the recurrence mask — padded
+    positions past it leave the state untouched, so the state handed to
+    decode is exactly the prompt's.  Enc-dec cross-attention reads the
+    admission-time cross pages through ``cross_block_table``."""
+    has_ssm, has_cross = paged_extra_inputs(cfg)
     lay, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
-                                             page_size, n_replicas)
+                                             page_size, n_replicas, n_slabs)
     pspecs = model.param_pspecs(cfg, plan)
     r_loc = n_replicas_local(mesh, plan, n_replicas)
     bt_ax = batch_axes(plan)
+    n_cross = kvcache.pages_needed(cfg.enc_seq_len, page_size) \
+        if has_cross else 0
 
-    def per_shard(params, cache, tokens, chunk_start, last_idx, block_table):
+    def per_shard(params, cache, tokens, chunk_start, last_idx, block_table,
+                  *extra):
         folded = kvcache.fold_replica_pools(cache)
+        extra = list(extra)
+        slab_ids = extra.pop(0) if has_ssm else None
+        cross_bt = extra.pop(0) if has_cross else None
         logits = []
         for i in range(r_loc):               # one chunk per local replica
             pages = {"block_table": block_table[i:i + 1] + i * n_pages,
                      "page_size": page_size}
+            if has_ssm:
+                pages["slab_ids"] = slab_ids[i:i + 1] + i * n_slabs
+                pages["last_idx"] = last_idx[i]
+            if has_cross:
+                pages["cross_block_table"] = cross_bt[i:i + 1] + i * n_pages
             lg, folded = model.forward_prefill_chunk(
                 params, folded, tokens[i:i + 1], chunk_start[i],
                 last_idx[i], cfg, plan, lay, pages)
@@ -587,26 +648,38 @@ def make_prefill_chunk_step(cfg, plan, mesh, chunk: int, n_pages: int,
          "last_idx": jax.ShapeDtypeStruct((n_replicas,), jnp.int32),
          "block_table": jax.ShapeDtypeStruct((n_replicas, n_max_pages),
                                              jnp.int32)}
+    extra_s = []
+    if has_ssm:
+        s["slab_ids"] = P(bt_ax)
+        t["slab_ids"] = jax.ShapeDtypeStruct((n_replicas,), jnp.int32)
+        extra_s.append(s["slab_ids"])
+    if has_cross:
+        s["cross_block_table"] = P(bt_ax, None)
+        t["cross_block_table"] = jax.ShapeDtypeStruct(
+            (n_replicas, n_cross), jnp.int32)
+        extra_s.append(s["cross_block_table"])
     fn = _shard_map(per_shard, mesh,
                     in_specs=(pspecs, s["cache"], s["tokens"],
                               s["chunk_start"], s["last_idx"],
-                              s["block_table"]),
+                              s["block_table"], *extra_s),
                     out_specs=(P(bt_ax, "model"), s["cache"]))
     return fn, t, s
 
 
 def make_page_copy_step(cfg, plan, mesh, n_pages: int, page_size: int,
-                        n_replicas: int = 1):
+                        n_replicas: int = 1, n_slabs: int = 0):
     """-> (copy_fn(cache, src (R,), dst (R,)) -> cache, templates, specs).
 
-    Copies one page's K/V across every layer pool, per replica — the
-    mechanism behind copy-on-write divergence: a slot that must append into
-    a shared page (radix prefix cache, ``serving.prefix_cache``) first
+    Copies one page's K/V across every layer's SELF-KV pool, per replica —
+    the mechanism behind copy-on-write divergence: a slot that must append
+    into a shared page (radix prefix cache, ``serving.prefix_cache``) first
     duplicates it into a private page, then writes only the copy.  Page ids
     are replica-relative data, so one compiled step serves every (src, dst)
-    mix; a replica with no copy this call passes src == dst (identity)."""
+    mix; a replica with no copy this call passes src == dst (identity).
+    SSM slab pools (different id space) and cross-KV pools (immutable,
+    refcount-shared, never COW'd) pass through untouched."""
     _, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
-                                           page_size, n_replicas)
+                                           page_size, n_replicas, n_slabs)
     r_loc = n_replicas_local(mesh, plan, n_replicas)
     bt_ax = batch_axes(plan)
 
@@ -619,7 +692,11 @@ def make_page_copy_step(cfg, plan, mesh, n_pages: int, page_size: int,
                 pool = jax.lax.dynamic_update_slice_in_dim(
                     pool, page, dst[i] + i * n_pages, axis=1)
             return kvcache.unfold_replica_pools(pool, r_loc)
-        return jax.tree_util.tree_map(leaf, cache)
+        # only the self-KV pools: slab/cross ids live in other spaces
+        return [[{kind: (jax.tree_util.tree_map(leaf, sub)
+                         if kind == "kv" else sub)
+                  for kind, sub in d.items()} for d in pat]
+                for pat in cache]
 
     s = {"cache": cache_s, "src": P(bt_ax), "dst": P(bt_ax)}
     t = {"cache": cache_t,
@@ -631,9 +708,74 @@ def make_page_copy_step(cfg, plan, mesh, n_pages: int, page_size: int,
     return fn, t, s
 
 
+def make_cross_kv_write_step(cfg, plan, mesh, n_pages: int, page_size: int,
+                             n_replicas: int = 1, n_slabs: int = 0):
+    """-> (write_fn(params, cache, frames (R, S_enc, E), cross_bt
+    (R, n_cross)) -> cache, templates, specs).
+
+    The enc-dec admission step: row r runs the ENCODER over replica r's
+    frames, projects every cross-attention layer's K/V of the encoder
+    memory, and scatters them into the ``ckp``/``cvp`` pools at the pages
+    named by its cross block table.  Runs once per admitted request (or
+    never, when the frames digest hits the replica's cross-KV cache);
+    the written pages are immutable afterwards — decode and chunked
+    prefill only read them — so identical-frame requests share them by
+    refcount alone.  A replica with nothing to encode rides along with
+    zero frames pointed at the scratch page."""
+    from repro.core.blocks import _kv_q
+    assert paged_extra_inputs(cfg)[1], \
+        f"{cfg.name} has no cross-attention layers"
+    lay, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
+                                             page_size, n_replicas, n_slabs)
+    pspecs = model.param_pspecs(cfg, plan)
+    r_loc = n_replicas_local(mesh, plan, n_replicas)
+    bt_ax = batch_axes(plan)
+    S_enc = cfg.enc_seq_len
+    n_cross = kvcache.pages_needed(S_enc, page_size)
+
+    def scatter(pool, kv1, bt_row, off):
+        """pool: (reps, R_loc*n_pages, G, psz, D); kv1: (reps, G, S_enc, D)
+        -> pool with position s written at page bt_row[s // psz] + off,
+        offset s % psz."""
+        pids = jnp.take(bt_row, jnp.arange(S_enc) // page_size) + off
+        offs = jnp.arange(S_enc) % page_size
+        val = _kv_q(kv1, pool.dtype).transpose(2, 0, 1, 3)  # (S_enc,reps,G,D)
+        return pool.at[:, pids, :, offs].set(val)
+
+    def per_shard(params, cache, frames, cross_bt):
+        folded = kvcache.fold_replica_pools(cache)
+        for i in range(r_loc):
+            enc = model.encode(params,
+                               frames[i:i + 1].astype(jnp.dtype(cfg.dtype)),
+                               cfg, plan, lay)
+            kvs = model.forward_cross_kv(params, enc, cfg, plan, lay)
+            for gi, per_pat in enumerate(kvs):
+                for pi, kv in enumerate(per_pat):
+                    if kv is None:
+                        continue
+                    cr = folded[gi][pi]["cross"]
+                    cr = {"ckp": scatter(cr["ckp"], kv["k"][:, 0],
+                                         cross_bt[i], i * n_pages),
+                          "cvp": scatter(cr["cvp"], kv["v"][:, 0],
+                                         cross_bt[i], i * n_pages)}
+                    folded[gi][pi] = dict(folded[gi][pi], cross=cr)
+        return kvcache.unfold_replica_pools(folded, r_loc)
+
+    s = {"cache": cache_s, "frames": P(bt_ax, None, None),
+         "cross_bt": P(bt_ax, None)}
+    t = {"cache": cache_t,
+         "frames": jax.ShapeDtypeStruct((n_replicas, S_enc, cfg.d_model),
+                                        jnp.dtype(cfg.dtype)),
+         "cross_bt": jax.ShapeDtypeStruct((n_replicas, n_cross), jnp.int32)}
+    fn = _shard_map(per_shard, mesh,
+                    in_specs=(pspecs, s["cache"], s["frames"], s["cross_bt"]),
+                    out_specs=s["cache"])
+    return fn, t, s
+
+
 def zero_paged_cache_for(cfg, plan, mesh, n_pages, page_size,
-                         n_replicas: int = 1):
+                         n_replicas: int = 1, n_slabs: int = 0):
     lay = model_layout(cfg, plan)
     tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size,
-                                        n_replicas)
+                                        n_replicas, n_slabs)
     return kvcache.zero_paged_cache(tmpl)

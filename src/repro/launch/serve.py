@@ -7,6 +7,19 @@ Builds the prefill/decode steps for a host mesh, spins up the
 continuous-batching engine, pushes synthetic requests, and reports
 TTFT / per-token latency / throughput.
 
+``--arch`` accepts any registered decode-capable config
+(``repro.configs``), including hybrid/SSM archs (e.g. ``hymba-1.5b``,
+``mamba2-370m`` — paged serving gives them per-request recurrent-state
+slabs) and encoder-decoder archs (e.g. ``seamless-m4t-large-v2`` — the
+launcher synthesizes encoder frame embeddings per request;
+``--frame-groups K`` spreads requests over K distinct frame tensors so
+the cross-KV cache's shared-encode path is exercised).  Vision-frontend
+archs are not servable paged and fail with a precise error.
+``--prefix-cache`` is attention-only-decoder territory: SSM state is not
+addressable by token-id prefixes and enc-dec self-KV depends on the
+frames, so the engine rejects those combinations (cross-KV sharing for
+enc-dec is automatic instead).
+
 Scheduling policy is selected with ``--policy {fcfs,priority,fair}``;
 ``--policy priority --preemption`` additionally evicts low-priority slots
 when urgent requests arrive, and ``--policy fair --preemption`` enables
@@ -33,7 +46,11 @@ import numpy as np
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", required=True,
+                    help="registered config id (repro.configs): dense/MoE "
+                         "decoders, hybrid/SSM (paged: recurrent-state "
+                         "slabs), enc-dec (paged: cross-KV pages + "
+                         "shared-frame encode reuse)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
@@ -59,6 +76,10 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common system-prompt prefix of this "
                          "many tokens to every request")
+    ap.add_argument("--frame-groups", type=int, default=1, metavar="K",
+                    help="enc-dec archs: spread requests over K distinct "
+                         "synthetic frame tensors (requests in a group "
+                         "share one encode's cross-KV pages)")
     ap.add_argument("--policy", choices=("fcfs", "priority", "fair"),
                     default="fcfs", help="admission policy (serving.policies)")
     ap.add_argument("--preemption", action="store_true",
@@ -130,6 +151,10 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed)
     shared = rng.randint(2, cfg.vocab_size,
                          args.shared_prefix).astype(np.int32)
+    frame_groups = [rng.randn(cfg.enc_seq_len, cfg.d_model
+                              ).astype(np.float32)
+                    for _ in range(max(args.frame_groups, 1))] \
+        if cfg.is_encdec else []
     reqs = []
     t0 = time.time()
     for rid in range(args.requests):
@@ -140,7 +165,9 @@ def main(argv=None):
         hi = args.high_priority_every and rid % args.high_priority_every == 0
         req = Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new,
                       priority=10 if hi else 0,
-                      client_id=rid % max(args.clients, 1))
+                      client_id=rid % max(args.clients, 1),
+                      frames=(frame_groups[rid % len(frame_groups)]
+                              if frame_groups else None))
         reqs.append(req)
         engine.submit(req)
     stats = engine.run()
@@ -171,6 +198,16 @@ def main(argv=None):
               f"prefill_tokens_skipped={stats.prefill_tokens_skipped} "
               f"cow_copies={stats.cow_copies} "
               f"cached_pages={cached} evictions={evictions}")
+    if engine.cross_caches:
+        print(f"cross_kv: hit_rate={stats.cross_hit_rate:.2f} "
+              f"({stats.cross_hits}/{stats.cross_lookups} lookups) "
+              f"encodes={stats.cross_encodes} "
+              f"cached_entries="
+              f"{sum(c.n_entries for c in engine.cross_caches)}")
+    if engine.slab_allocators:
+        print(f"ssm_slabs: per_replica={engine.n_slabs - 1} "
+              f"allocated={sum(s.total_allocated for s in engine.slab_allocators)} "
+              f"stash_restores={stats.slab_restores}")
     if args.dp > 1:
         print(f"router: affinity_routed={engine.router.affinity_routed}"
               f"/{args.requests}")

@@ -30,6 +30,32 @@ Two cache disciplines, selected by the ``paged`` flag:
   token, copying partially-shared pages copy-on-write
   (``serving.prefix_cache``).
 
+**Architecture coverage** (paged engine): beyond attention-only decoders,
+
+* *SSM/hybrid* archs get one recurrent-state **slab** per admitted request
+  (``SlabAllocator``; slab 0 is scratch, mirroring page 0): SSM layers
+  read/write their slab by slot-relative slab id while hybrid attention
+  heads keep reading KV through block tables.  Slabs are zeroed at
+  admission.  Preemption CHECKPOINTS the slot — recurrent state cannot be
+  re-derived from donated pages — into a host-side stash (slab + resident
+  KV page payloads); resume re-admits cold, restores the stash into the
+  freshly allocated slab/pages, and continues exactly where it stopped
+  (``stats.slab_restores``).  The token-id radix prefix cache is
+  unavailable here (and raises a precise error): an SSM layer's state for
+  a shared prefix is not addressable by pages.
+* *Enc-dec* archs run ``encode`` once at admission: a compiled cross-KV
+  write step projects the encoder memory's K/V into read-only **cross
+  pages** that decode/prefill read through a second block table.  Requests
+  whose frames digest matches share one encode's pages by refcount
+  (``CrossKVCache``) — no copy-on-write, since cross pages are immutable
+  after the write.  The token-id prefix cache is likewise unavailable
+  (self-KV depends on the frames through cross-attention, so equal token
+  prefixes do NOT imply equal KV — sharing would be silently wrong).
+
+Admission budgets pages + slabs + cross pages JOINTLY (all-or-nothing),
+and ``drain()`` leak-freedom extends to all three: after every admission
+retires, each replica's pages are free or cache-held and its slabs free.
+
 **Data parallelism** (``dp`` — paged engine only): the engine runs ``dp``
 *replicas*, each with its own ``batch_slots`` slots and — crucially — its
 own replica-local ``PageAllocator``, ``RadixPrefixCache`` and
@@ -61,8 +87,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kvcache import SCRATCH_PAGE, PageAllocator
-from repro.serving.prefix_cache import RadixPrefixCache
+from repro.core.kvcache import (SCRATCH_PAGE, SCRATCH_SLAB, PageAllocator,
+                                SlabAllocator, cache_profile, pages_needed)
+from repro.serving.prefix_cache import CrossKVCache, RadixPrefixCache
 from repro.serving.router import Router
 from repro.serving.sampler import SamplerConfig, sample_from_logits
 from repro.serving.scheduler import (Admission, FCFSScheduler, Scheduler,
@@ -73,6 +100,7 @@ from repro.serving.scheduler import (Admission, FCFSScheduler, Scheduler,
 class Request:
     rid: int
     prompt: np.ndarray                 # (S,) int32
+    frames: Optional[np.ndarray] = None  # (enc_seq_len, d_model) — enc-dec
     max_new_tokens: int = 32
     priority: int = 0                  # higher = more urgent (policies.py)
     client_id: int = 0                 # fairness accounting key (policies.py)
@@ -95,6 +123,8 @@ class ReplicaStats:
     preemptions: int = 0
     prefix_lookups: int = 0
     prefix_hits: int = 0
+    cross_lookups: int = 0             # enc-dec frames-digest lookups
+    cross_hits: int = 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -112,6 +142,10 @@ class EngineStats:
     preemptions: int = 0
     prefix_lookups: int = 0
     prefix_hits: int = 0
+    cross_lookups: int = 0             # enc-dec frames-digest lookups
+    cross_hits: int = 0                # ... served from a shared encode
+    cross_encodes: int = 0             # cross-KV write steps actually run
+    slab_restores: int = 0             # preempted SSM state reloads
     tpot_s: list = field(default_factory=list)
     request_ttft: dict = field(default_factory=dict)   # rid -> seconds
     replicas: List[ReplicaStats] = field(default_factory=list)
@@ -126,6 +160,11 @@ class EngineStats:
         return self.prefix_hits / self.prefix_lookups \
             if self.prefix_lookups else 0.0
 
+    @property
+    def cross_hit_rate(self) -> float:
+        return self.cross_hits / self.cross_lookups \
+            if self.cross_lookups else 0.0
+
 
 class ServingEngine:
     def __init__(self, cfg, plan, mesh, batch_slots: int, seq_budget: int,
@@ -134,7 +173,7 @@ class ServingEngine:
                  paged: bool = False, page_size: int = 16,
                  n_pages: int = 0, prefill_chunk: int = 0,
                  prefix_cache: bool = False, scheduler=None,
-                 rng_seed: int = 0, dp: int = 1):
+                 rng_seed: int = 0, dp: int = 1, n_slabs: int = 0):
         from repro.core import steps as _steps
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
         assert dp >= 1, dp
@@ -156,28 +195,69 @@ class ServingEngine:
                                            for _ in range(self.R)])
         self.allocators: List[PageAllocator] = []
         self.prefix_caches: List[Optional[RadixPrefixCache]] = []
+        self.slab_allocators: List[SlabAllocator] = []
+        self.cross_caches: List[Optional[CrossKVCache]] = []
         self.router: Optional[Router] = None
+        prof = cache_profile(cfg)
+        self.has_ssm = paged and "ssm" in prof
+        self.has_cross = paged and "cross_kv" in prof
         if paged:
+            from repro.core.kvcache import paged_cache_supported
+            ok, why = paged_cache_supported(cfg)
+            if not ok:
+                raise ValueError(
+                    f"paged serving unsupported for arch '{cfg.name}': {why}")
+            if prefix_cache and self.has_ssm:
+                raise ValueError(
+                    f"prefix_cache=True is unsupported for arch "
+                    f"'{cfg.name}': its SSM layers hold recurrent state "
+                    f"that a token-id prefix cannot address (cache kinds "
+                    f"{sorted(prof)}); run it paged without the prefix "
+                    f"cache")
+            if prefix_cache and self.has_cross:
+                raise ValueError(
+                    f"prefix_cache=True is unsupported for arch "
+                    f"'{cfg.name}': decoder self-KV depends on the "
+                    f"request's encoder frames through cross-attention, "
+                    f"so equal token prefixes do not imply equal KV; "
+                    f"cross-KV sharing is keyed by frames digest instead "
+                    f"(automatic)")
             assert seq_budget % page_size == 0, (seq_budget, page_size)
             assert prefill_chunk > 0 and seq_budget % prefill_chunk == 0, \
                 (seq_budget, prefill_chunk)
             self.page_size = page_size
             self.chunk = prefill_chunk
             self.n_max_pages = seq_budget // page_size
+            self.n_slabs = n_slabs or batch_slots + 1
+            self.n_cross_pages = pages_needed(cfg.enc_seq_len, page_size) \
+                if self.has_cross else 0
             # replica-local pools: refcounts never cross a replica boundary
             self.allocators = [PageAllocator(n_pages) for _ in range(dp)]
             self.prefix_caches = [
                 RadixPrefixCache(a, page_size) if prefix_cache else None
                 for a in self.allocators]
+            self.slab_allocators = [SlabAllocator(self.n_slabs)
+                                    for _ in range(dp)] if self.has_ssm \
+                else []
+            self.cross_caches = [CrossKVCache(a) for a in self.allocators] \
+                if self.has_cross else []
             self.slot_state: List[Optional[str]] = [None] * self.B
             self.prefill_done = np.zeros(self.B, np.int32)
-            self.cache = _steps.zero_paged_cache_for(cfg, plan, mesh,
-                                                     n_pages, page_size,
-                                                     n_replicas=dp)
-            copy_fn, _, _ = _steps.make_page_copy_step(cfg, plan, mesh,
-                                                       n_pages, page_size,
-                                                       n_replicas=dp)
-            self.copy_fn = jax.jit(copy_fn)
+            self._stash: dict = {}     # rid -> preempted SSM checkpoint
+            self.cache = _steps.zero_paged_cache_for(
+                cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
+                n_slabs=self.n_slabs if self.has_ssm else 0)
+            self.copy_fn = None        # COW only exists with self-KV pools
+            if "kv" in prof:
+                copy_fn, _, _ = _steps.make_page_copy_step(
+                    cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
+                    n_slabs=self.n_slabs if self.has_ssm else 0)
+                self.copy_fn = jax.jit(copy_fn)
+            if self.has_cross:
+                cross_fn, _, _ = _steps.make_cross_kv_write_step(
+                    cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
+                    n_slabs=self.n_slabs if self.has_ssm else 0)
+                self.cross_write_fn = jax.jit(cross_fn)
         else:
             assert not prefix_cache, "prefix cache requires the paged engine"
             self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
@@ -199,6 +279,13 @@ class ServingEngine:
                       allocator=self.allocators[r] if paged else None,
                       page_size=page_size if paged else 0,
                       prefix_cache=self.prefix_caches[r] if paged else None,
+                      slab_allocator=(self.slab_allocators[r]
+                                      if self.has_ssm else None),
+                      cross_cache=(self.cross_caches[r]
+                                   if self.has_cross else None),
+                      cross_pages_per_req=(self.n_cross_pages
+                                           if self.has_cross else 0),
+                      kv_pages=not paged or "kv" in prof,
                       stats=self.stats)
                 for r in range(dp)]
         for r, s in enumerate(self.scheds):
@@ -208,7 +295,8 @@ class ServingEngine:
                 s.replica_stats = self.stats.replicas[r]
         if paged:
             self.router = Router(self.scheds, self.allocators,
-                                 self.prefix_caches, page_size)
+                                 self.prefix_caches, page_size,
+                                 cross_caches=self.cross_caches or None)
         self._rids: set = set()
         self.rng_seed = rng_seed
 
@@ -218,29 +306,41 @@ class ServingEngine:
                     prefill_chunk: int = 16, eos_id: int = 1,
                     sampler: Optional[SamplerConfig] = None,
                     prefix_cache: bool = False, scheduler=None,
-                    rng_seed: int = 0, dp: int = 1):
-        """Construct a paged engine, compiling its (chunk, decode) pair.
+                    rng_seed: int = 0, dp: int = 1, n_slabs: int = 0):
+        """Construct a paged engine, compiling its (chunk, decode) pair
+        (plus the cross-KV write step for enc-dec archs).
 
         ``n_pages`` is the PER-REPLICA pool size and defaults to full
-        occupancy (every slot at budget) plus the scratch page; pass
-        something smaller to exercise admission control under memory
-        pressure.  ``dp`` replicas each get ``batch_slots`` slots and their
-        own pool, driven together by one compiled step pair."""
+        occupancy (every slot at budget, plus every slot's cross-KV pages
+        for enc-dec archs) plus the scratch page; pass something smaller to
+        exercise admission control under memory pressure.  ``n_slabs``
+        (SSM/hybrid archs) defaults to one recurrent-state slab per slot
+        plus the scratch slab.  ``dp`` replicas each get ``batch_slots``
+        slots and their own pool, driven together by one compiled step
+        pair."""
         from repro.core import steps as _steps
+        from repro.core.kvcache import paged_cache_supported
+        ok, why = paged_cache_supported(cfg)
+        if not ok:
+            raise ValueError(
+                f"paged serving unsupported for arch '{cfg.name}': {why}")
+        has_ssm, has_cross = _steps.paged_extra_inputs(cfg)
         n_max = seq_budget // page_size
-        n_pages = n_pages or batch_slots * n_max + 1
+        n_cross = pages_needed(cfg.enc_seq_len, page_size) if has_cross else 0
+        n_pages = n_pages or batch_slots * (n_max + n_cross) + 1
+        n_slabs = n_slabs or batch_slots + 1
         dec, _, _ = _steps.make_paged_decode_step(
             cfg, plan, mesh, batch_slots, n_pages, page_size, n_max,
-            n_replicas=dp)
+            n_replicas=dp, n_slabs=n_slabs if has_ssm else 0)
         chunk_fn, _, _ = _steps.make_prefill_chunk_step(
             cfg, plan, mesh, prefill_chunk, n_pages, page_size, n_max,
-            n_replicas=dp)
+            n_replicas=dp, n_slabs=n_slabs if has_ssm else 0)
         return cls(cfg, plan, mesh, batch_slots, seq_budget, params,
                    jax.jit(chunk_fn), jax.jit(dec), eos_id=eos_id,
                    sampler=sampler, paged=True, page_size=page_size,
                    n_pages=n_pages, prefill_chunk=prefill_chunk,
                    prefix_cache=prefix_cache, scheduler=scheduler,
-                   rng_seed=rng_seed, dp=dp)
+                   rng_seed=rng_seed, dp=dp, n_slabs=n_slabs)
 
     # ------------------------------------------------------------------ API
     @property
@@ -278,12 +378,92 @@ class ServingEngine:
         """Replica-local slot index -> global slot index."""
         return r * self.Bp + local
 
+    # ------------------------------------------------- cache-tree plumbing
+    def _kind_leaves(self, kind: str):
+        """Leaves of one cache kind ("kv" pools / "ssm" slabs / "cross"),
+        in deterministic tree order."""
+        out = []
+        for pat in self.cache:
+            for d in pat:
+                if kind in d:
+                    out.extend(jax.tree_util.tree_leaves(d[kind]))
+        return out
+
+    def _update_kind(self, kind: str, fn):
+        """Rebuild ``self.cache`` applying ``fn(leaf, i)`` to the i-th leaf
+        of ``kind`` (same order as ``_kind_leaves``); other kinds pass
+        through untouched."""
+        idx = [0]
+
+        def upd(leaf):
+            res = fn(leaf, idx[0])
+            idx[0] += 1
+            return res
+
+        self.cache = [[{k: (jax.tree_util.tree_map(upd, v) if k == kind
+                            else v) for k, v in d.items()}
+                       for d in pat] for pat in self.cache]
+
+    def _zero_slab(self, r: int, slab: int):
+        """Fresh requests start from zero recurrent state; the previous
+        occupant's state persists in the pool otherwise."""
+        self._update_kind(
+            "ssm", lambda leaf, i: leaf.at[:, r, slab].set(0))
+
+    def _stash_slot(self, b: int, adm, n: int):
+        """Checkpoint a preempted SSM-arch slot to host: the slab (state
+        after exactly ``n`` tokens) plus the payloads of the KV pages
+        covering those tokens.  KV alone could be recomputed, but not
+        THROUGH hybrid layers without re-advancing the SSM state — the
+        resume point must restore both or neither, so both are stashed."""
+        r = self._rep(b)
+        stash = {"n": n, "ssm": [], "kv": [], "n_kv_pages": 0}
+        for leaf in self._kind_leaves("ssm"):
+            stash["ssm"].append(np.asarray(leaf[:, r, adm.slab]))
+        if adm.pages:
+            k = pages_needed(n, self.page_size)
+            pids = jnp.asarray(np.asarray(adm.pages[:k], np.int32))
+            stash["n_kv_pages"] = k
+            for leaf in self._kind_leaves("kv"):
+                stash["kv"].append(np.asarray(leaf[:, r, pids]))
+        self._stash[adm.req.rid] = stash
+
+    def _restore_slot(self, b: int, adm, stash):
+        """Reload a stashed checkpoint into the re-admission's freshly
+        allocated slab and pages; prefill then continues at token
+        ``stash["n"]`` — nothing resident is recomputed."""
+        r = self._rep(b)
+        ssm_payload = stash["ssm"]
+        self._update_kind(
+            "ssm", lambda leaf, i: leaf.at[:, r, adm.slab].set(
+                jnp.asarray(ssm_payload[i])))
+        k = stash["n_kv_pages"]
+        if k:
+            pids = jnp.asarray(np.asarray(adm.pages[:k], np.int32))
+            kv_payload = stash["kv"]
+            self._update_kind(
+                "kv", lambda leaf, i: leaf.at[:, r, pids].set(
+                    jnp.asarray(kv_payload[i])))
+        self.stats.slab_restores += 1
+
     def has_pending(self) -> bool:
         return any(s.has_pending() for s in self.scheds)
 
     def submit(self, req: Request):
         if req.rid in self._rids:     # rids key the per-request stats
             raise RuntimeError(f"duplicate request id {req.rid}")
+        if self.cfg.is_encdec:
+            want = (self.cfg.enc_seq_len, self.cfg.d_model)
+            if req.frames is None:
+                raise RuntimeError(
+                    f"request {req.rid}: arch '{self.cfg.name}' is "
+                    f"encoder-decoder — Request.frames of shape {want} "
+                    f"(encoder frame embeddings) is required")
+            if tuple(np.shape(req.frames)) != want:
+                raise RuntimeError(
+                    f"request {req.rid}: frames shape "
+                    f"{tuple(np.shape(req.frames))} != {want} expected by "
+                    f"arch '{self.cfg.name}' (enc_seq_len, d_model)")
         r = self.router.route(req) if self.router is not None else 0
         self.scheds[r].submit(req)    # raises on infeasible requests
         if self.router is not None:
@@ -311,7 +491,13 @@ class ServingEngine:
         ``sched.on_finish`` so its pages return to that replica's pool —
         no leaked refcounts.  Aborted requests keep ``done=False``;
         queued-but-never-admitted requests hold no resources and stay
-        queued.  -> number of slots drained."""
+        queued.  -> number of slots drained.
+
+        Host-side SSM checkpoints are dropped too: a still-queued
+        preempted request that resumes after a drain re-prefills from
+        scratch (exact — admission plans cold and zeroes its slab)
+        instead of restoring, so stash memory cannot outlive the work
+        it was checkpointing."""
         n = 0
         for b in range(self.B):
             adm = self.admissions[b]
@@ -320,6 +506,8 @@ class ServingEngine:
             self.scheds[self._rep(b)].on_finish(adm)
             self._clear_slot(b)
             n += 1
+        if self.paged:
+            self._stash.clear()
         return n
 
     def preempt(self, b: int):
@@ -337,6 +525,12 @@ class ServingEngine:
         assert adm is not None, f"slot {b} is idle"
         n = int(self.prefill_done[b]) if self.slot_state[b] == "prefill" \
             else int(self.pos[b])
+        if self.has_ssm:
+            # recurrent state cannot be re-derived from donated pages:
+            # checkpoint the slot (slab + resident KV payloads) to host
+            # BEFORE the scheduler releases its resources; resume reloads
+            # it (see _restore_slot)
+            self._stash_slot(b, adm, n)
         resident = effective_prompt(adm.req)[:n]
         self.scheds[self._rep(b)].on_preempt(adm, resident)
         self._clear_slot(b)
@@ -408,7 +602,10 @@ class ServingEngine:
             self._prefill_into(adm.slot, adm.req)
 
     def _prefill_into(self, b: int, req: Request):
-        """Prefill a single request and splice its cache into lane b."""
+        """Prefill a single request and splice its cache into lane b.
+        Enc-dec archs additionally run the encoder over the request's
+        frames here; prefill writes the cross-KV lane the decode step
+        reads."""
         from repro.core import steps as _steps
         S = len(req.prompt)
         assert S < self.S
@@ -417,8 +614,15 @@ class ServingEngine:
         lane_cache = _steps.zero_cache_for(self.cfg, self.plan, self.mesh, 1,
                                            self.S)
         with self.mesh:
-            logits, lane_cache = self.prefill_fn(
-                self.params, jnp.asarray(prompt[:, :S]), lane_cache)
+            if self.cfg.is_encdec:
+                logits, lane_cache = self.prefill_fn(
+                    self.params,
+                    jnp.asarray(np.asarray(req.frames, np.float32)[None],
+                                jnp.dtype(self.cfg.dtype)),
+                    jnp.asarray(prompt[:, :S]), lane_cache)
+            else:
+                logits, lane_cache = self.prefill_fn(
+                    self.params, jnp.asarray(prompt[:, :S]), lane_cache)
         self.stats.prefills += 1
         self.stats.replicas[self._rep(b)].prefills += 1
         # splice lane 0 of lane_cache into slot b of the engine cache
@@ -449,14 +653,17 @@ class ServingEngine:
 
     def _admit_paged(self):
         """Execute this tick's admissions, per replica.  COW page copies
-        are batched across replicas: each compiled copy call carries one
-        (src, dst) pair per replica (identity pairs for replicas with
-        nothing to copy)."""
+        and cross-KV encodes are batched across replicas: each compiled
+        call carries one unit of work per replica (identity/scratch rows
+        for replicas with nothing to do).  SSM-arch slots get their slab
+        zeroed — or, for a preempted request, restored from its host-side
+        stash, resuming prefill at the checkpointed token."""
         cow_rounds: List[List[Optional[Admission]]] = []
+        cross_rounds: List[List[Optional[Admission]]] = []
         for r in range(self.R):
             free = [b - r * self.Bp for b in self._rep_slots(r)
                     if self.admissions[b] is None]
-            n_cow = 0
+            n_cow = n_cross = 0
             for adm in self.scheds[r].plan(free):
                 b = self._gslot(r, adm.slot)
                 self.admissions[b] = adm
@@ -466,6 +673,11 @@ class ServingEngine:
                         cow_rounds.append([None] * self.R)
                     cow_rounds[n_cow][r] = adm
                     n_cow += 1
+                if adm.needs_encode:
+                    if n_cross == len(cross_rounds):
+                        cross_rounds.append([None] * self.R)
+                    cross_rounds[n_cross][r] = adm
+                    n_cross += 1
                 # prefix-cached tokens are already resident: prefill resumes
                 # at the first uncached position (for a preempted request
                 # this is its donated progress — reused, not recomputed)
@@ -473,6 +685,32 @@ class ServingEngine:
                 self.stats.prefill_tokens_skipped += adm.cached_len
                 self.pos[b] = 0
                 self.last_token[b] = 0
+                if self.has_ssm:
+                    stash = self._stash.pop(adm.req.rid, None)
+                    if stash is not None:
+                        self._restore_slot(b, adm, stash)
+                        self.prefill_done[b] = stash["n"]
+                        self.stats.prefill_tokens_skipped += stash["n"]
+                    else:
+                        self._zero_slab(r, adm.slab)
+        for round_ in cross_rounds:
+            frames = np.zeros((self.R, self.cfg.enc_seq_len,
+                               self.cfg.d_model), np.float32)
+            cbt = np.full((self.R, self.n_cross_pages), SCRATCH_PAGE,
+                          np.int32)
+            for r, adm in enumerate(round_):
+                if adm is not None:
+                    frames[r] = np.asarray(adm.req.frames, np.float32)
+                    cbt[r] = adm.cross_pages
+            with self.mesh:
+                self.cache = self.cross_write_fn(
+                    self.params, self.cache,
+                    jnp.asarray(frames, jnp.dtype(self.cfg.dtype)),
+                    jnp.asarray(cbt))
+            for r, adm in enumerate(round_):
+                if adm is not None:
+                    self.scheds[r].on_cross_written(adm)
+                    self.stats.cross_encodes += 1
         for round_ in cow_rounds:
             src = np.full(self.R, SCRATCH_PAGE, np.int32)
             dst = np.full(self.R, SCRATCH_PAGE, np.int32)   # src==dst: no-op
@@ -493,6 +731,18 @@ class ServingEngine:
         if adm is not None and adm.pages is not None:
             row[:len(adm.pages)] = adm.pages
         return row
+
+    def _cross_row(self, b: int) -> np.ndarray:
+        row = np.full(self.n_cross_pages, SCRATCH_PAGE, np.int32)
+        adm = self.admissions[b]
+        if adm is not None and adm.cross_pages is not None:
+            row[:] = adm.cross_pages
+        return row
+
+    def _slab_id(self, b: int, active: bool = True) -> int:
+        adm = self.admissions[b]
+        return adm.slab if (active and adm is not None
+                            and adm.slab is not None) else SCRATCH_SLAB
 
     def _prefill_tick_paged(self):
         """Advance every prefilling slot by one chunk.  Slots are batched
@@ -515,6 +765,9 @@ class ServingEngine:
         starts = np.zeros(self.R, np.int32)
         last_idx = np.zeros(self.R, np.int32)
         bt = np.full((self.R, self.n_max_pages), SCRATCH_PAGE, np.int32)
+        slabs = np.full(self.R, SCRATCH_SLAB, np.int32)
+        cbt = np.full((self.R, self.n_cross_pages if self.has_cross else 1),
+                      SCRATCH_PAGE, np.int32)
         prompts = {}
         for r, b in enumerate(rows):
             if b is None:
@@ -528,10 +781,17 @@ class ServingEngine:
             starts[r] = c0
             last_idx[r] = min(L - 1 - c0, C - 1)
             bt[r] = self._bt_row(b)
+            slabs[r] = self._slab_id(b)
+            if self.has_cross:
+                cbt[r] = self._cross_row(b)
+        args = [self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(starts), jnp.asarray(last_idx), jnp.asarray(bt)]
+        if self.has_ssm:
+            args.append(jnp.asarray(slabs))
+        if self.has_cross:
+            args.append(jnp.asarray(cbt))
         with self.mesh:
-            logits, self.cache = self.prefill_fn(
-                self.params, self.cache, jnp.asarray(toks),
-                jnp.asarray(starts), jnp.asarray(last_idx), jnp.asarray(bt))
+            logits, self.cache = self.prefill_fn(*args)
         logits_np = None
         for r, (b, req, prompt) in prompts.items():
             L = len(prompt)
@@ -562,15 +822,27 @@ class ServingEngine:
         if not active:
             return
         # idle / prefilling lanes ride along pointed at the scratch page
-        bt = np.stack([self._bt_row(b) if b in active else
+        # (and scratch slab / scratch cross pages), so full-batch decode
+        # never touches a live slab or a prefilling slot's pages
+        act = set(active)
+        bt = np.stack([self._bt_row(b) if b in act else
                        np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
                        for b in range(self.B)])
         pos = np.where(np.isin(np.arange(self.B), active), self.pos, 0)
-        with self.mesh:
-            logits, self.cache = self.decode_fn(
-                self.params, self.cache,
+        args = [self.params, self.cache,
                 jnp.asarray(self.last_token[:, None]),
-                jnp.asarray(pos.astype(np.int32)), jnp.asarray(bt))
+                jnp.asarray(pos.astype(np.int32)), jnp.asarray(bt)]
+        if self.has_ssm:
+            slabs = np.asarray([self._slab_id(b, b in act)
+                                for b in range(self.B)], np.int32)
+            args.append(jnp.asarray(slabs))
+        if self.has_cross:
+            cbt = np.stack([self._cross_row(b) if b in act else
+                            np.full(self.n_cross_pages, SCRATCH_PAGE,
+                                    np.int32) for b in range(self.B)])
+            args.append(jnp.asarray(cbt))
+        with self.mesh:
+            logits, self.cache = self.decode_fn(*args)
         logits = np.asarray(jax.device_get(logits)).astype(np.float32)
         now = time.monotonic()
         for b in active:

@@ -1,4 +1,17 @@
-"""Radix prefix cache: token-id sequences -> refcounted page runs.
+"""Prefix/cross caches: resident KV that admission maps instead of recomputing.
+
+Two caches live here, both holding refcounted page runs in the replica's
+``PageAllocator`` id space:
+
+* ``RadixPrefixCache`` — token-id prefixes of *self*-attention KV
+  (attention-only decoders; see the invariants below).
+* ``CrossKVCache``    — encoder-memory cross-KV keyed by a digest of the
+  request's frames (enc-dec archs): requests with identical frames share
+  one encode's pages by refcount alone.  Cross pages are immutable after
+  the admission-time write, so there is no copy-on-write and no radix
+  structure — frames either match exactly or not at all.
+
+Radix prefix cache: token-id sequences -> refcounted page runs.
 
 The serving-layer analogue of the paper's stationary-state discipline:
 KV already resident in the page pool is never recomputed or re-stored.
@@ -31,7 +44,10 @@ Invariants (see README §Serving):
 """
 from __future__ import annotations
 
+import hashlib
 from typing import List, Optional, Tuple
+
+import numpy as np
 
 
 def _common_len(a, b) -> int:
@@ -199,5 +215,88 @@ class RadixPrefixCache:
             self.allocator.decref(victim.pages)
             freed += len(victim.pages)
             del victim.parent.children[victim.key[:self.psz]]
+            self.evictions += 1
+        return freed
+
+
+class CrossKVCache:
+    """Encoder cross-KV sharing: frames digest -> refcounted page run.
+
+    The cache holds ONE allocator ref per page of every entry; a serving
+    slot that hits takes an extra ref (``acquire``) and drops it at
+    finish/preemption, so an entry's pages return to the pool only when
+    the entry is evicted AND no slot still reads them.  Entries whose
+    pages are unshared (refcount 1 — cache-only) are LRU-evictable under
+    pool pressure.  No copy-on-write: cross pages are written once at
+    admission (``steps.make_cross_kv_write_step``) and read-only after."""
+
+    def __init__(self, allocator):
+        self.allocator = allocator
+        self._entries: dict = {}    # digest -> [pages, last_access]
+        self._clock = 0
+        self.evictions = 0
+
+    @staticmethod
+    def digest(frames) -> str:
+        """Identity of an encoder input (exact-content digest)."""
+        a = np.ascontiguousarray(np.asarray(frames))
+        return hashlib.sha1(a.tobytes() + str(a.shape).encode()).hexdigest()
+
+    @property
+    def n_cached_pages(self) -> int:
+        return sum(len(e[0]) for e in self._entries.values())
+
+    @property
+    def n_entries(self) -> int:
+        return len(self._entries)
+
+    @property
+    def n_evictable_pages(self) -> int:
+        return sum(len(e[0]) for e in self._entries.values()
+                   if all(self.allocator.refcount(p) == 1 for p in e[0]))
+
+    def has(self, key: str) -> bool:
+        """Read-only residency probe (no refs, no LRU touch) — the dp
+        router's frames-affinity signal."""
+        return key in self._entries
+
+    def acquire(self, key: str) -> Optional[List[int]]:
+        """Pages for ``key`` with one extra (slot) ref taken, or None."""
+        self._clock += 1
+        e = self._entries.get(key)
+        if e is None:
+            return None
+        e[1] = self._clock
+        self.allocator.incref(e[0])
+        return list(e[0])
+
+    def insert(self, key: str, pages: List[int]) -> bool:
+        """Adopt ``pages`` (freshly written cross-KV) under ``key``; takes
+        one cache ref per page.  Returns False (no refs taken) when the
+        key is already cached — the caller's pages then stay slot-private
+        and die with the slot (two same-frame admissions in one tick)."""
+        self._clock += 1
+        if key in self._entries:
+            return False
+        self.allocator.incref(pages)
+        self._entries[key] = [list(pages), self._clock]
+        return True
+
+    def evict(self, n_pages: int) -> int:
+        """Evict LRU unshared entries until >= n_pages freed (or nothing
+        evictable remains).  -> pages actually freed."""
+        freed = 0
+        while freed < n_pages:
+            victim = None
+            for k, (pages, last) in self._entries.items():
+                if any(self.allocator.refcount(p) > 1 for p in pages):
+                    continue            # a live slot still reads them
+                if victim is None or last < self._entries[victim][1]:
+                    victim = k
+            if victim is None:
+                break
+            pages, _ = self._entries.pop(victim)
+            self.allocator.decref(pages)
+            freed += len(pages)
             self.evictions += 1
         return freed

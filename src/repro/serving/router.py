@@ -21,10 +21,17 @@ The router resolves it with the classic two-level rule:
    replica index (deterministic routing).
 
 Routing happens once, at submit, and is sticky: preemption donates pages
-to the *owning* replica's prefix cache and re-queues on the same replica's
-scheduler, so resume is a local prefix hit.  Affinity lookups take no page
-refs (``RadixPrefixCache.lookup`` is read-only apart from its LRU clock),
-so routing can never pin or leak pages.
+to the *owning* replica's prefix cache (or stashes SSM state / releases
+cross refs) and re-queues on the same replica's scheduler, so resume is
+a local hit.  Affinity lookups take no page refs
+(``RadixPrefixCache.lookup`` is read-only apart from its LRU clock), so
+routing can never pin or leak pages.
+
+Replica-locality invariant: the router is the ONLY component that sees
+all replicas at once.  Everything it routes to — allocator, slab
+allocator, prefix/cross caches, scheduler queues, preemption donations —
+is replica-local, and no page/slab id ever crosses a replica boundary;
+the dp tests assert per-replica leak-freedom independently.
 """
 from __future__ import annotations
 
@@ -41,11 +48,12 @@ class Router:
 
     def __init__(self, scheds: List, allocators: List,
                  prefix_caches: List[Optional[object]], page_size: int,
-                 recent_window: int = 32):
+                 recent_window: int = 32, cross_caches=None):
         assert len(scheds) == len(allocators) == len(prefix_caches)
         self.scheds = scheds
         self.allocators = allocators
         self.prefix_caches = prefix_caches
+        self.cross_caches = cross_caches or [None] * len(scheds)
         self.psz = page_size
         self.n_replicas = len(scheds)
         self.affinity_routed = 0       # requests placed by prefix affinity
@@ -53,6 +61,10 @@ class Router:
         # bursts whose shared prefix hasn't finished prefilling anywhere yet
         self._recent = [collections.deque(maxlen=recent_window)
                         for _ in range(self.n_replicas)]
+        # frames digests recently routed per replica (enc-dec): same
+        # speculative window for encodes that haven't landed yet
+        self._recent_frames = [collections.deque(maxlen=recent_window)
+                               for _ in range(self.n_replicas)]
 
     def page_load(self, r: int) -> int:
         """Replica r's page pressure: pages held that eviction cannot
@@ -71,16 +83,30 @@ class Router:
         """Per-replica affinity score: the longest cached prefix of the
         request's effective prompt, or the longest common prefix with a
         recently routed prompt (resident-or-soon KV), whichever is
-        longer."""
+        longer.  Enc-dec requests additionally score a frames-digest hit
+        on the replica's cross-KV cache (or its recently routed digests)
+        as one full page — landing where the encode already ran turns a
+        duplicate encode into a refcount share."""
         prompt = effective_prompt(req)
         toks = [int(t) for t in prompt]
+        digest = None
+        if getattr(req, "frames", None) is not None and \
+                any(c is not None for c in self.cross_caches):
+            from repro.serving.prefix_cache import CrossKVCache
+            digest = CrossKVCache.digest(req.frames)
         out = []
-        for c, recent in zip(self.prefix_caches, self._recent):
+        for r, (c, recent) in enumerate(zip(self.prefix_caches,
+                                            self._recent)):
             s = c.lookup(prompt)[0] if c is not None else 0
             for q in recent:
                 if s >= len(toks):
                     break
                 s = max(s, _common_len(q, toks))
+            if digest is not None:
+                xc = self.cross_caches[r]
+                if (xc is not None and xc.has(digest)) or \
+                        digest in self._recent_frames[r]:
+                    s = max(s, self.psz)
             out.append(s)
         return out
 
@@ -99,7 +125,11 @@ class Router:
         return min(cand, key=lambda rr: (self.page_load(rr), rr))
 
     def commit(self, req, r: int) -> None:
-        """Record a successful placement: ``req``'s prompt joins replica
-        r's recent-routing window (rejected requests must not skew
-        affinity, so this is separate from ``route``)."""
+        """Record a successful placement: ``req``'s prompt (and frames
+        digest, for enc-dec) joins replica r's recent-routing window
+        (rejected requests must not skew affinity, so this is separate
+        from ``route``)."""
         self._recent[r].append([int(t) for t in effective_prompt(req)])
+        if getattr(req, "frames", None) is not None:
+            from repro.serving.prefix_cache import CrossKVCache
+            self._recent_frames[r].append(CrossKVCache.digest(req.frames))

@@ -27,6 +27,26 @@ prefix hit and the KV is never recomputed), releases the slot's page refs,
 and re-queues the request.  A resumed request's admission plans over its
 *effective prompt* — original prompt plus the tokens it already generated —
 so the ordinary prefix-hit machinery restores its state.
+
+Beyond attention-only archs, admission is a JOINT all-or-nothing budget:
+
+* **SSM/hybrid** — one recurrent-state slab per request
+  (``slab_allocator``); a request is admitted only if pages AND a slab are
+  both available, and every rollback returns both.  These archs carry no
+  radix prefix cache (their state is not re-derivable from token-id
+  prefixes), so on preemption the ENGINE checkpoints the slot (slab +
+  resident KV pages) to a host-side stash; ``on_preempt`` here just
+  releases the resources and re-queues.
+* **enc-dec** — ``cross_pages_per_req`` pages of encoder cross-KV from the
+  same allocator: a frames-digest hit on the replica's ``CrossKVCache``
+  shares the resident pages (refcount only), a miss allocates fresh pages
+  and marks the admission ``needs_encode`` so the engine runs the
+  cross-KV write step once; ``on_cross_written`` then publishes the pages
+  for later identical-frame requests.
+
+Leak-freedom invariant (asserted by tests at drain): every page is either
+free, radix-cached, or cross-cached, and every slab is free, after
+``run()``/``drain()`` retire all admissions.
 """
 from __future__ import annotations
 
@@ -68,13 +88,20 @@ class Admission:
     — chunked prefill starts at this offset.  cow: (src, dst) page pair the
     engine must copy before the slot's first write (divergence out of a
     shared partial page).  seq: global admission order stamp (preemptive
-    policies use it to pick the victim with the least sunk work)."""
+    policies use it to pick the victim with the least sunk work).
+    slab: the slot's recurrent-state slab id (SSM/hybrid archs).
+    cross_pages: the slot's read-only cross-KV page run (enc-dec archs);
+    needs_encode marks a frames-digest miss — the engine must run the
+    cross-KV write step before this slot's first prefill chunk."""
     slot: int
     req: object
     pages: Optional[List[int]] = None
     cached_len: int = 0
     cow: Optional[Tuple[int, int]] = None
     seq: int = 0
+    slab: Optional[int] = None
+    cross_pages: Optional[List[int]] = None
+    needs_encode: bool = False
 
 
 class Scheduler:
@@ -108,6 +135,9 @@ class Scheduler:
     def on_prefill_complete(self, adm: Admission) -> None:
         """adm's prompt is fully resident (cache-insertion hook)."""
 
+    def on_cross_written(self, adm: Admission) -> None:
+        """The engine ran adm's cross-KV write — publish the pages."""
+
     def on_finish(self, adm: Admission) -> None:
         """adm's request retired — release its resources."""
 
@@ -128,12 +158,24 @@ class FCFSScheduler(Scheduler):
     LRU cache runs when the pool can't cover the remainder."""
 
     def __init__(self, *, seq_budget: int, allocator=None, page_size: int = 0,
-                 prefix_cache=None, stats=None):
+                 prefix_cache=None, stats=None, slab_allocator=None,
+                 cross_cache=None, cross_pages_per_req: int = 0,
+                 kv_pages: bool = True):
         self.queue: collections.deque = collections.deque()
         self.seq_budget = seq_budget
         self.allocator = allocator
         self.psz = page_size
         self.prefix_cache = prefix_cache
+        # False for pure-SSM archs: no layer has a KV pool, so per-token
+        # page demand is zero (state lives entirely in the slab)
+        self.kv_pages = kv_pages
+        self.slab_allocator = slab_allocator        # SSM/hybrid archs
+        self.cross_cache = cross_cache              # enc-dec archs
+        self.cross_pages_per_req = cross_pages_per_req
+        # cross pages planned this tick but not yet written: a second
+        # same-frame admission in the same plan() round shares them
+        # instead of running a duplicate encode
+        self._pending_cross: dict = {}
         self.stats = stats
         self._round = 0      # logical clock: one tick per plan() call
         self._adm_seq = 0    # admission order stamp
@@ -177,13 +219,16 @@ class FCFSScheduler(Scheduler):
                     f"request {req.rid} needs {len(req.prompt)} prompt + "
                     f"{req.max_new_tokens} new tokens; the sequence budget "
                     f"is {self.seq_budget}")
-            need = pages_needed(len(req.prompt) + req.max_new_tokens,
-                                self.psz)
+            need = (pages_needed(len(req.prompt) + req.max_new_tokens,
+                                 self.psz) if self.kv_pages else 0) \
+                + self.cross_pages_per_req
             usable = self.allocator.n_pages - self.allocator.n_reserved
             if need > usable:       # reject now, not mid-run at admission
                 raise RuntimeError(
-                    f"request {req.rid} needs {need} pages; the pool only "
-                    f"has {usable} usable")
+                    f"request {req.rid} needs {need} pages"
+                    + (f" (incl. {self.cross_pages_per_req} cross-KV)"
+                       if self.cross_pages_per_req else "")
+                    + f"; the pool only has {usable} usable")
         elif len(req.prompt) >= self.seq_budget:
             # the contiguous lane needs room past the prompt for decode
             raise RuntimeError(
@@ -199,26 +244,46 @@ class FCFSScheduler(Scheduler):
         return list(self.queue)
 
     def _req_pages(self, req) -> int:
-        """Page demand of one queued request.  Constant while it waits
-        (out_tokens only grow while admitted), so the backlog counter's
-        add/subtract stay symmetric across put-backs and requeues."""
+        """Page demand of one queued request (cross-KV included).
+        Constant while it waits (out_tokens only grow while admitted), so
+        the backlog counter's add/subtract stay symmetric across put-backs
+        and requeues."""
         if not self.paged:
             return 0
-        return pages_needed(len(effective_prompt(req)) +
-                            remaining_new_tokens(req), self.psz)
+        return (pages_needed(len(effective_prompt(req)) +
+                             remaining_new_tokens(req), self.psz)
+                if self.kv_pages else 0) + self.cross_pages_per_req
+
+    def _evictable_pages(self) -> int:
+        """Pages eviction could eventually reclaim across both caches."""
+        n = 0
+        if self.prefix_cache is not None:
+            n += self.prefix_cache.n_evictable_pages
+        if self.cross_cache is not None:
+            n += self.cross_cache.n_evictable_pages
+        return n
+
+    def _reclaim(self, shortfall: int) -> None:
+        """Evict cached runs until ``shortfall`` pages are freed (radix
+        prefix leaves first — they are rebuildable per request — then
+        whole cross-KV entries)."""
+        if self.prefix_cache is not None:
+            shortfall -= self.prefix_cache.evict(shortfall)
+        if shortfall > 0 and self.cross_cache is not None:
+            self.cross_cache.evict(shortfall)
 
     def _admissible_without_eviction(self, req) -> bool:
         """True if a free slot could actually serve ``req`` right now —
-        pool pages included.  A free slot whose pool is exhausted must not
-        suppress preemption: evicting a victim is what frees the pages."""
+        pool pages and state slabs included.  A free slot whose pool is
+        exhausted must not suppress preemption: evicting a victim is what
+        frees the pages (and its slab)."""
         if not self.paged:
             return True
-        need = pages_needed(len(effective_prompt(req)) +
-                            remaining_new_tokens(req), self.psz)
-        avail = self.allocator.n_free
-        if self.prefix_cache is not None:
-            avail += self.prefix_cache.n_evictable_pages
-        return avail >= need
+        if self.slab_allocator is not None and \
+                self.slab_allocator.n_free == 0:
+            return False
+        return self.allocator.n_free + self._evictable_pages() \
+            >= self._req_pages(req)
 
     # ---------------------------------------------------------- admission
     def plan(self, free_slots: List[int]) -> List[Admission]:
@@ -244,16 +309,23 @@ class FCFSScheduler(Scheduler):
 
     def _can_reclaim(self, need: int) -> bool:
         """True if evicting cache runs can actually cover a ``need``-page
-        allocation (free pages + eventually-evictable cached pages)."""
-        return self.prefix_cache is not None and \
-            self.allocator.n_free + self.prefix_cache.n_evictable_pages \
-            >= need
+        allocation (free pages + eventually-evictable cached pages, radix
+        and cross-KV caches both)."""
+        ev = self._evictable_pages()
+        return ev > 0 and self.allocator.n_free + ev >= need
 
     def _plan_paged(self, slot: int, req) -> Optional[Admission]:
         prompt = effective_prompt(req)
         L = len(prompt)
-        total = pages_needed(L + remaining_new_tokens(req), self.psz)
+        total = pages_needed(L + remaining_new_tokens(req), self.psz) \
+            if self.kv_pages else 0
         alloc = self.allocator
+        # ---- recurrent-state slab (SSM/hybrid): all-or-nothing with pages
+        slab = None
+        if self.slab_allocator is not None:
+            slab = self.slab_allocator.alloc()
+            if slab is None:        # every slot busy or leaked — wait
+                return None
         cached_len, run = 0, []
         if self.prefix_cache is not None:
             matched, run = self.prefix_cache.lookup(prompt)
@@ -272,7 +344,7 @@ class FCFSScheduler(Scheduler):
         if fresh is None and self._can_reclaim(need):
             # evict only when it actually covers the shortfall — a futile
             # eviction would wipe hot prefixes and still leave us blocked
-            self.prefix_cache.evict(need - alloc.n_free)
+            self._reclaim(need - alloc.n_free)
             fresh = alloc.alloc(need)
         if fresh is None and (shared or cow_src is not None):
             # Prefix reuse itself can block admission: the pins above make
@@ -286,25 +358,58 @@ class FCFSScheduler(Scheduler):
             shared, cow_src, cached_len, n_full = [], None, 0, 0
             need = total
             if alloc.n_free < need and self._can_reclaim(need):
-                self.prefix_cache.evict(need - alloc.n_free)
+                self._reclaim(need - alloc.n_free)
             fresh = alloc.alloc(need)
         if fresh is None:           # roll the pins back; the head blocks
             alloc.decref(shared)
             if cow_src is not None:
                 alloc.decref([cow_src])
+            if slab is not None:
+                self.slab_allocator.free(slab)
             return None
+        # ---- encoder cross-KV (enc-dec): digest hit shares, miss encodes
+        cross_pages, needs_encode = None, False
+        if self.cross_cache is not None:
+            key = self.cross_cache.digest(req.frames)
+            cross_pages = self.cross_cache.acquire(key)
+            if cross_pages is None and key in self._pending_cross:
+                # same frames admitted earlier this tick: its write step
+                # runs before any read, so sharing is already safe
+                cross_pages = list(self._pending_cross[key])
+                alloc.incref(cross_pages)
+            if cross_pages is None:
+                needs_encode = True
+                ncross = self.cross_pages_per_req
+                cross_pages = alloc.alloc(ncross)
+                if cross_pages is None and self._can_reclaim(ncross):
+                    self._reclaim(ncross - alloc.n_free)
+                    cross_pages = alloc.alloc(ncross)
+                if cross_pages is None:   # joint rollback; the head blocks
+                    alloc.decref(shared + fresh)
+                    if cow_src is not None:
+                        alloc.decref([cow_src])
+                    if slab is not None:
+                        self.slab_allocator.free(slab)
+                    return None
+                self._pending_cross[key] = list(cross_pages)
         # count stats on admission only — a blocked head-of-line request is
-        # re-planned every tick and must not inflate the hit rate
+        # re-planned every tick and must not inflate the hit rates
         if self.prefix_cache is not None:
             for st in (self.stats, self.replica_stats):
                 if st is not None:
                     st.prefix_lookups += 1
                     st.prefix_hits += cached_len > 0
+        if self.cross_cache is not None:
+            for st in (self.stats, self.replica_stats):
+                if st is not None:
+                    st.cross_lookups += 1
+                    st.cross_hits += not needs_encode
         # fresh[0] sits at block-table index n_full: exactly where the COW
         # copy of the partial page belongs
         cow = (cow_src, fresh[0]) if cow_src is not None else None
         return Admission(slot=slot, req=req, pages=shared + fresh,
-                         cached_len=cached_len, cow=cow)
+                         cached_len=cached_len, cow=cow, slab=slab,
+                         cross_pages=cross_pages, needs_encode=needs_encode)
 
     # ------------------------------------------------------------- events
     def on_cow_done(self, adm: Admission) -> None:
@@ -319,16 +424,35 @@ class FCFSScheduler(Scheduler):
             self.prefix_cache.insert(prompt[:n_full * self.psz],
                                      adm.pages[:n_full])
 
+    def on_cross_written(self, adm: Admission) -> None:
+        """The engine encoded adm's frames and wrote its cross pages —
+        publish them for later identical-frame requests (the cache takes
+        its own refs) and retire the same-tick pending entry."""
+        key = self.cross_cache.digest(adm.req.frames)
+        self._pending_cross.pop(key, None)
+        self.cross_cache.insert(key, adm.cross_pages)
+
+    def _release(self, adm: Admission) -> None:
+        """Drop every resource an admission holds (pages, slab, cross)."""
+        self.allocator.decref(adm.pages)
+        if adm.slab is not None:
+            self.slab_allocator.free(adm.slab)
+        if adm.cross_pages is not None:
+            self.allocator.decref(adm.cross_pages)
+
     def on_finish(self, adm: Admission) -> None:
         if self.paged:
-            self.allocator.decref(adm.pages)
+            self._release(adm)
 
     def on_preempt(self, adm: Admission, resident_tokens) -> None:
         """Salvage an evicted slot: donate its resident *full* pages to the
         prefix cache (resume finds them as a prefix hit — the victim's KV
-        is reused, never recomputed), drop the slot's page refs, and
-        re-queue the request.  The partial tail page is slot-private KV and
-        is simply freed; resume re-prefills those few tokens."""
+        is reused, never recomputed), drop the slot's page refs (slab and
+        cross-KV refs too — SSM state travels via the engine's host-side
+        stash instead, and cross pages usually stay resident in the
+        cross-KV cache), and re-queue the request.  The partial tail page
+        is slot-private KV and is simply freed; resume re-prefills those
+        few tokens."""
         if self.paged:
             if self.prefix_cache is not None:
                 n_full = len(resident_tokens) // self.psz
@@ -336,6 +460,6 @@ class FCFSScheduler(Scheduler):
                     self.prefix_cache.insert(
                         resident_tokens[:n_full * self.psz],
                         adm.pages[:n_full])
-            self.allocator.decref(adm.pages)
+            self._release(adm)
         self._requeue_preempted(adm.req)
         self.backlog_pages += self._req_pages(adm.req)

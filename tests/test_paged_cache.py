@@ -272,11 +272,24 @@ def test_paged_engine_rejects_oversized_request(mesh1):
         eng.submit(req)
 
 
-def test_paged_cache_rejects_ssm_archs():
+def test_paged_cache_arch_support():
+    """SSM/hybrid (slab pools) and enc-dec (cross pools) are paged now;
+    only archs whose prefill needs non-token inputs the chunk step cannot
+    carry (vision embeds) are rejected — with a precise reason."""
     from repro.core.kvcache import paged_cache_supported, paged_cache_template
     from repro.core.partition import model_layout
+    for name in ("mamba2-370m", "hymba-1.5b", "seamless-m4t-large-v2"):
+        cfg = reduced(get_config(name))
+        ok, why = paged_cache_supported(cfg)
+        assert ok, (name, why)
     cfg = reduced(get_config("mamba2-370m"))
+    tmpl = paged_cache_template(cfg, PLAN, model_layout(cfg, PLAN), 8, 4,
+                                n_slabs=3)
+    # slab pools only: a pure-SSM arch has no KV page pools at all
+    kinds = {k for pat in tmpl for d in pat for k in d}
+    assert kinds == {"ssm"}
+    cfg = reduced(get_config("pixtral-12b"))
     ok, why = paged_cache_supported(cfg)
-    assert not ok and "ssm" in why
-    with pytest.raises(ValueError):
+    assert not ok and "vision" in why
+    with pytest.raises(ValueError, match="vision"):
         paged_cache_template(cfg, PLAN, model_layout(cfg, PLAN), 8, 4)
