@@ -7,8 +7,8 @@ AR memory-dominated vs prompt compute-dominated.
 from __future__ import annotations
 
 from repro.configs import get_config
-from repro.sim.siracusa import SiracusaConfig
 from repro.sim.simulator import simulate_model
+from repro.sim.siracusa import SiracusaConfig
 from repro.sim.workload import mobilebert_block, tinyllama_block
 
 PAPER = {"ar_8": 26.1, "prompt_8": 9.9, "mb_4": 4.7}

@@ -8,8 +8,8 @@ inefficiency at 4 chips.
 from __future__ import annotations
 
 from repro.configs import get_config
-from repro.sim.siracusa import SiracusaConfig
 from repro.sim.simulator import simulate_model
+from repro.sim.siracusa import SiracusaConfig
 from repro.sim.workload import mobilebert_block, tinyllama_block
 
 PAPER = {"ar8_ms": 0.54, "ar8_mj": 0.64}

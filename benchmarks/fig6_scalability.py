@@ -6,8 +6,8 @@ linear to 16 chips then diminishing; 1.3x energy reduction @ 64 chips.
 from __future__ import annotations
 
 from repro.configs import get_config
-from repro.sim.siracusa import SiracusaConfig
 from repro.sim.simulator import simulate_model
+from repro.sim.siracusa import SiracusaConfig
 from repro.sim.workload import tinyllama_block
 
 PAPER = {"ar_64": 60.1, "energy_ratio_64": 1.3}

@@ -1,7 +1,9 @@
 """Serving throughput bench: contiguous vs paged vs paged+prefix-cache,
 plus a mixed-priority QoS scenario (FCFS vs preemptive priority), a
-dp-scaling scenario, and a hybrid-arch (attention+SSM slab) row whose
-outputs are asserted token-identical to the contiguous oracle.
+dp-scaling scenario, a hybrid-arch (attention+SSM slab) row whose
+outputs are asserted token-identical to the contiguous oracle, and a
+speculative-decoding row (prompt-lookup drafts + k-token verify) gated
+on accepted tokens per verify tick staying above one.
 
 Drives the full ServingEngine on a shared-system-prompt workload (every
 request = common prefix + unique suffix — the traffic shape the radix
@@ -214,6 +216,58 @@ def run_hybrid_mode(plan, mesh, sz):
     return _stats_row("hybrid", eng, stats, dt, sz["requests"])
 
 
+def run_spec_mode(cfg, plan, mesh, params, sz, k=4):
+    """Speculative-decoding scenario: prompt-lookup drafts + k-token verify
+    on a shared-prefix workload whose suffixes repeat a short motif (the
+    traffic prompt lookup targets).  Greedy outputs are asserted
+    token-identical to the non-speculative paged engine (the full
+    policy/dp/sampling matrix lives in scripts/check_spec_identity.py) and
+    the accepted-tokens rate feeds the regression gate.  -> row dict
+    ("speculative")."""
+    from repro.serving import Request, ServingEngine
+
+    rng = np.random.RandomState(7)
+    vocab = cfg.vocab_size
+    shared = rng.randint(2, vocab, sz["prefix"]).astype(np.int32)
+    base = []
+    for i in range(sz["requests"]):
+        motif = rng.randint(2, vocab, 3 + i % 3).astype(np.int32)
+        body = np.tile(motif, 4)[: sz["suffix"] + i % 4]
+        base.append(np.concatenate([shared, body]).astype(np.int32))
+    max_new = 2 * sz["max_new"]   # room for repetition loops to develop
+    # headroom pool so speculative page budgeting is never the bottleneck
+    n_pages = 2 * sz["slots"] * (sz["seq_budget"] // sz["page_size"]) + 1
+
+    outs = {}
+    for spec in (0, k):
+        eng = ServingEngine.build_paged(
+            cfg, plan, mesh, sz["slots"], sz["seq_budget"], params,
+            page_size=sz["page_size"], prefill_chunk=sz["chunk"],
+            n_pages=n_pages, prefix_cache=True, speculative=spec)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(base)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        stats = eng.run(max_ticks=50_000)
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        outs[spec] = {r.rid: tuple(r.out_tokens) for r in reqs}
+    assert outs[0] == outs[k], \
+        "speculative outputs diverged from the one-token engine"
+    row = _stats_row("speculative", eng, stats, dt, sz["requests"])
+    row["speculative_k"] = k
+    row["accepted_tokens_per_tick"] = stats.accepted_tokens_per_tick
+    row["draft_hit_rate"] = stats.draft_hit_rate
+    row["spec_accepted"] = stats.spec_accepted
+    row["spec_drafted"] = stats.spec_drafted
+    # the acceptance bar: speculation must beat one token per verify tick
+    # on this workload, or the feature is dead weight
+    assert row["accepted_tokens_per_tick"] > 1.0, \
+        f"accepted_tokens_per_tick={row['accepted_tokens_per_tick']:.2f}"
+    return row
+
+
 def run_dp_mode(dp, cfg, plan, mesh, params, sz):
     """dp-scaling scenario: two tenant groups, each sharing its own system
     prompt.  With dp=2 the router splits the tenants across replicas by
@@ -310,7 +364,15 @@ def rows(smoke: bool = False):
     hybrid_row = run_hybrid_mode(plan, mesh, sz)
     print(f"# hybrid arch: {hybrid_row['tokens_per_s']:.1f} tok/s "
           f"(outputs oracle-identical, slabs leak-free)")
-    return out + [fcfs_row, pre_row, dp1_row, dp2_row, hybrid_row]
+    # speculative decoding: prompt-lookup drafts, identity-checked
+    spec_row = run_spec_mode(cfg, plan, mesh, params, sz)
+    print(f"# speculative k={spec_row['speculative_k']}: "
+          f"accepted_tokens_per_tick="
+          f"{spec_row['accepted_tokens_per_tick']:.2f} "
+          f"draft_hit_rate={spec_row['draft_hit_rate']:.2f} "
+          f"({spec_row['spec_accepted']}/{spec_row['spec_drafted']} "
+          f"draft tokens accepted; outputs identical to one-token engine)")
+    return out + [fcfs_row, pre_row, dp1_row, dp2_row, hybrid_row, spec_row]
 
 
 def main(smoke=False, json_path=None):

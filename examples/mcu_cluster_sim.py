@@ -6,8 +6,8 @@ for TinyLlama (AR + prompt), MobileBERT, and the 64-head scalability study.
     PYTHONPATH=src python examples/mcu_cluster_sim.py
 """
 from repro.configs import get_config
-from repro.sim.siracusa import SiracusaConfig
 from repro.sim.simulator import simulate_model
+from repro.sim.siracusa import SiracusaConfig
 from repro.sim.workload import mobilebert_block, tinyllama_block
 
 

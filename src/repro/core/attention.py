@@ -25,7 +25,7 @@ from repro.core import collectives as cc
 NEG = -1e30
 
 
-def _online_chunk(acc, m, l, q, k, v, mask, scale, softcap=0.0):
+def _online_chunk(acc, m, den, q, k, v, mask, scale, softcap=0.0):
     """One online-softmax update.  q:(...,R,Sq,D) k:(...,C,D) mask:(...,Sq,C)."""
     s = jnp.einsum("...rsd,...cd->...rsc", q, k,
                    preferred_element_type=jnp.float32) * scale
@@ -35,11 +35,11 @@ def _online_chunk(acc, m, l, q, k, v, mask, scale, softcap=0.0):
     m_new = jnp.maximum(m, jnp.max(s, axis=-1))
     p = jnp.exp(s - m_new[..., None]) * mask[..., None, :, :]
     corr = jnp.exp(m - m_new)
-    l_new = l * corr + jnp.sum(p, axis=-1)
+    den_new = den * corr + jnp.sum(p, axis=-1)
     pv = jnp.einsum("...rsc,...cd->...rsd", p.astype(v.dtype), v,
                     preferred_element_type=jnp.float32)
     acc_new = acc * corr[..., None] + pv
-    return acc_new, m_new, l_new
+    return acc_new, m_new, den_new
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
@@ -85,7 +85,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
             ks, vs, kv_base = k, v, kv_offset
 
         def kv_step(carry, c):
-            acc, m, l = carry
+            acc, m, den = carry
             kc = jax.lax.dynamic_slice_in_dim(ks, c * kv_block, kv_block, axis=2)
             vc = jax.lax.dynamic_slice_in_dim(vs, c * kv_block, kv_block, axis=2)
             kv_pos = kv_base + c * kv_block + jnp.arange(kv_block)
@@ -96,13 +96,15 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
             if window > 0:
                 mask &= kv_pos[None, :] > q_pos[:, None] - window
             mask = jnp.broadcast_to(mask, (B, G, q_block, kv_block))
-            return _online_chunk(acc, m, l, qb, kc, vc, mask, scale, softcap), None
+            return _online_chunk(acc, m, den, qb, kc, vc, mask, scale,
+                                 softcap), None
 
         acc0 = jnp.zeros((B, G, R, q_block, D), jnp.float32)
         m0 = jnp.full((B, G, R, q_block), NEG, jnp.float32)
         l0 = jnp.zeros((B, G, R, q_block), jnp.float32)
-        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(n_kv))
-        return acc / jnp.maximum(l, 1e-20)[..., None]
+        (acc, m, den), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                        jnp.arange(n_kv))
+        return acc / jnp.maximum(den, 1e-20)[..., None]
 
     out = jax.lax.map(lambda args: one_q_block(*args),
                       (jnp.arange(nq), jnp.moveaxis(q_blocked, 3, 0)))
@@ -165,15 +167,15 @@ def decode_attention(q, k_cache, v_cache, slot_pos, cur_pos, *, window=0,
     s = jnp.where(valid[:, None, None, :], s, NEG)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None]) * valid[:, None, None, :]
-    l = jnp.sum(p, axis=-1)
+    den = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bgrs,bgsd->bgrd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     if seq_axes:
         gm = cc.psum_max(m, seq_axes, tag + "/m")
         w = jnp.exp(m - gm)
-        l = cc.psum(l * w, seq_axes, tag + "/l")
+        den = cc.psum(den * w, seq_axes, tag + "/l")
         acc = cc.psum(acc * w[..., None], seq_axes, tag + "/acc")
-    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = acc / jnp.maximum(den, 1e-20)[..., None]
     return out.astype(q.dtype)
 
 
@@ -212,3 +214,43 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, cur_pos, *,
                             gather_pages(v_pool, block_table), kv_pos,
                             cur_pos, window=window, softcap=softcap,
                             scale=scale, tag="attn/paged_decode")
+
+
+def paged_verify_attention(q, k_pool, v_pool, block_table, cur_pos, *,
+                           window=0, softcap=0.0, scale=None):
+    """Q-query decode attention for speculative verify.
+
+    q: (B, G, R, Q, D) — per slot, query i sits at absolute position
+    ``cur_pos + i`` (query 0 is the slot's last accepted token; queries
+    1..Q-1 are drafted tokens whose KV the caller wrote this step).
+    Pools/block_table as in ``paged_decode_attention``; cur_pos: (B,).
+
+    Validity generalizes decode's ``s <= cur_pos`` per query:
+    ``kv_pos <= cur_pos + i`` — the causal mask inside the draft block
+    falls out of it, since draft j's KV sits at position cur_pos + j.
+    One gather and one batched score pass serve all Q queries, so the
+    pools stream off-chip once per verify step instead of once per token
+    (the bandwidth argument for speculation on a memory-bound decode).
+    """
+    B, G, R, Q, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    L = block_table.shape[1] * k_pool.shape[2]
+    kf = gather_pages(k_pool, block_table)
+    vf = gather_pages(v_pool, block_table)
+    s = jnp.einsum("bgrqd,bgsd->bgrqs", q, kf,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_pos = jnp.arange(L, dtype=jnp.int32)[None, None, :]   # (1, 1, L)
+    q_pos = cur_pos[:, None, None] + jnp.arange(Q)[None, :, None]  # (B,Q,1)
+    valid = kv_pos <= q_pos                                  # (B, Q, L)
+    if window > 0:
+        valid &= kv_pos > q_pos - window
+    s = jnp.where(valid[:, None, None], s, NEG)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None]) * valid[:, None, None]
+    den = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bgrqs,bgsd->bgrqd", p.astype(vf.dtype), vf,
+                     preferred_element_type=jnp.float32)
+    out = acc / jnp.maximum(den, 1e-20)[..., None]
+    return out.astype(q.dtype)

@@ -19,7 +19,7 @@ from repro.configs.base import FFN_MOE, FFN_NONE, MIX_ATTN, MIX_SSM
 from repro.core import collectives as cc
 from repro.core import ssm as ssd
 from repro.core.attention import decode_attention, flash_attention, \
-    gather_pages, paged_decode_attention
+    gather_pages, paged_decode_attention, paged_verify_attention
 from repro.core.layers import activation, apply_norm, apply_rope, rmsnorm, \
     rmsnorm_from_sumsq
 from repro.core.moe import moe_ffn_ep, moe_ffn_tp
@@ -261,6 +261,19 @@ def _paged_attn(qg, kg, vg, kv, pages, mode, positions, pos, window, cfg):
             _kv_dq(new["vp"], qg.dtype), bt, pos, window=window,
             scale=cfg.attn_scale)
         return out[:, :, :, None, :], new
+    if mode == "verify":
+        # speculative verify: token i of the block sits at position
+        # pos + i (token 0 = the slot's last accepted token, the rest are
+        # drafts).  Write all Q tokens' KV — padded/overflow rows carry
+        # position -1 and land on the scratch page — then score every
+        # position against the gathered stream in one pass; acceptance
+        # and rollback are host-side pos bookkeeping (rejected KV is
+        # masked by validity until the next step overwrites it)
+        new = _page_write(kv, kg, vg, positions, bt, psz)
+        out = paged_verify_attention(
+            qg, _kv_dq(new["kp"], qg.dtype), _kv_dq(new["vp"], qg.dtype),
+            bt, pos, window=window, scale=cfg.attn_scale)
+        return out, new
     # prefill chunk: write the chunk, then attend to the gathered prefix
     new = _page_write(kv, kg, vg, positions, bt, psz)
     k_all = gather_pages(_kv_dq(new["kp"], qg.dtype), bt)     # (B,G,L,D)
@@ -272,10 +285,14 @@ def _paged_attn(qg, kg, vg, kv, pages, mode, positions, pos, window, cfg):
 
 def _page_write(kv, kg, vg, positions, bt, psz):
     """Scatter new K/V into the page pool.  kg/vg: (B, G, C, D);
-    positions: (B, C) absolute token positions (C = 1 for decode)."""
+    positions: (B, C) absolute token positions (C = 1 for decode).
+    Negative positions (padded verify queries) route to the scratch page
+    (page 0), whose contents are never read by a live slot."""
     B, G, C, D = kg.shape
-    pid = jnp.take_along_axis(bt, positions // psz, axis=1)    # (B, C)
-    off = positions % psz
+    safe = jnp.maximum(positions, 0)
+    pid = jnp.take_along_axis(bt, safe // psz, axis=1)         # (B, C)
+    pid = jnp.where(positions >= 0, pid, 0)
+    off = safe % psz
     kq = _kv_q(kg, kv["kp"].dtype).transpose(0, 2, 1, 3)       # (B,C,G,D)
     vq = _kv_q(vg, kv["vp"].dtype).transpose(0, 2, 1, 3)
     flat_pid, flat_off = pid.reshape(-1), off.reshape(-1)

@@ -145,7 +145,7 @@ def _nbytes(x) -> int:
 
 
 def _tree_bytes(tree) -> int:
-    return sum(_nbytes(l) for l in jax.tree_util.tree_leaves(tree))
+    return sum(_nbytes(leaf) for leaf in jax.tree_util.tree_leaves(tree))
 
 
 # ---------------------------------------------------------------------------

@@ -354,6 +354,17 @@ class PageAllocator:
                 f"multi-ref releases must go through decref()"
         self.decref(pages)
 
+    def trim(self, pages):
+        """Release a slot's *tail* pages while the slot stays live (the
+        speculative-decoding rollback path: draft-headroom pages past the
+        block-table keep point).  Unlike ``free``, a trimmed page may
+        legitimately be shared by the time the trim runs — a preemption
+        donated the slot's resident pages to the prefix cache, or another
+        admission mapped them — so trim drops exactly the slot's own
+        reference and the page returns to the pool only when its last
+        sharer lets go."""
+        self.decref(pages)
+
 
 class SlabAllocator:
     """Host-side free-list allocator for SSM state slabs (slab 0 scratch).

@@ -603,6 +603,33 @@ def forward_decode(params, cache, tokens, pos, cfg, plan, lay, pages=None):
     return logits, cache
 
 
+def forward_verify(params, cache, tokens, pos, qlen, cfg, plan, lay,
+                   pages=None):
+    """Speculative verify: score Q consecutive positions per slot at once.
+
+    tokens: (B, Q) — column 0 is the slot's last accepted token, columns
+    1..Q-1 are drafted continuations; pos: (B,) absolute position of
+    column 0; qlen: (B,) live columns per row (columns >= qlen are
+    padding — their positions are set to -1 so their KV lands on the
+    scratch page and their logits are garbage the caller ignores).
+    -> (logits (B, Q, V_loc), cache): row i is the next-token distribution
+    after consuming tokens[:, :i+1] — token-equivalent to feeding them to
+    ``forward_decode`` one at a time, in one fused pass over the cache.
+    """
+    B, Q = tokens.shape
+    positions = pos[:, None] + jnp.broadcast_to(jnp.arange(Q), (B, Q))
+    positions = jnp.where(jnp.arange(Q)[None, :] < qlen[:, None],
+                          positions, -1)
+    x = embed_tokens(params, tokens, cfg, plan, lay)
+    groups = cfg.layer_groups()
+    x, cache = _run_stack(x, params["stacks"], groups, cfg, plan, lay,
+                          "verify", positions, pos=pos, cache=cache,
+                          pages=pages)
+    x = apply_norm(x, params["final_norm"], cfg)
+    logits = final_logits(params, x, cfg, lay)
+    return logits, cache
+
+
 def forward_prefill_chunk(params, cache, tokens, chunk_start, last_idx, cfg,
                           plan, lay, pages):
     """One fixed-size prefill chunk against the paged cache.

@@ -104,8 +104,8 @@ def make_train_step(cfg, plan, mesh, opt_cfg: Optional[AdamWConfig] = None,
 
             def acc_step(carry, mb):
                 loss_a, g_a = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
-                return (loss_a + l / grad_accum,
+                lv, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (loss_a + lv / grad_accum,
                         jax.tree_util.tree_map(
                             lambda a, b: a + b / grad_accum, g_a, g)), None
 
@@ -263,8 +263,8 @@ def make_train_step_zero1(cfg, plan, mesh,
 
             def acc_step(carry, mb):
                 l_a, g_a = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
-                return (l_a + l / grad_accum,
+                lv, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (l_a + lv / grad_accum,
                         jax.tree_util.tree_map(
                             lambda a, b: a + b / grad_accum, g_a, g)), None
             zeros = jax.tree_util.tree_map(
@@ -359,7 +359,9 @@ def init_train_state(cfg, plan, seed=0):
 
 def abstract_train_state(cfg, plan):
     params = model.abstract_params(cfg, plan)
-    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    def f32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
     return {"params": params,
             "opt": {"m": jax.tree_util.tree_map(f32, params),
                     "v": jax.tree_util.tree_map(f32, params),
@@ -588,6 +590,54 @@ def make_paged_decode_step(cfg, plan, mesh, batch: int, n_pages: int,
                     in_specs=(pspecs, s["cache"], s["tokens1"], s["pos"],
                               s["block_table"], *extra_s),
                     out_specs=(P(bt_ax, "model"), s["cache"]))
+    return fn, t, s
+
+
+def make_verify_step(cfg, plan, mesh, batch: int, q_len: int, n_pages: int,
+                     page_size: int, n_max_pages: int, n_replicas: int = 1):
+    """-> (verify_fn(params, cache, tokens (R*B, Q), pos (R*B,), qlen (R*B,),
+    block_table (R*B, n_max)) -> (logits (R*B, Q, V), cache), templates,
+    specs).
+
+    The speculative-decoding companion of ``make_paged_decode_step``: one
+    fused call scores Q = k+1 positions per slot (the last accepted token
+    plus k drafted continuations), writing all Q tokens' KV through the
+    block table and reading the whole cache once.  ``qlen`` marks the live
+    columns per row; padded columns write to the scratch page and their
+    logits rows are garbage the engine ignores.  Attention-only archs
+    only: SSM recurrences advance strictly one token per step and cross
+    archs gate speculation off at the engine."""
+    has_ssm, has_cross = paged_extra_inputs(cfg)
+    assert not (has_ssm or has_cross), \
+        f"verify step requires an attention-only arch, got '{cfg.name}'"
+    lay, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
+                                             page_size, n_replicas, 0)
+    pspecs = model.param_pspecs(cfg, plan)
+    r_loc = n_replicas_local(mesh, plan, n_replicas)
+    bt_ax = batch_axes(plan)
+
+    def per_shard(params, cache, tokens, pos, qlen, block_table):
+        rep_row = jnp.arange(r_loc * batch, dtype=jnp.int32) // batch
+        offs = rep_row[:, None] * n_pages
+        pages = {"block_table": block_table + offs, "page_size": page_size}
+        logits, folded = model.forward_verify(
+            params, kvcache.fold_replica_pools(cache), tokens, pos, qlen,
+            cfg, plan, lay, pages=pages)
+        return logits, kvcache.unfold_replica_pools(folded, r_loc)
+
+    s = {"cache": cache_s, "tokens": P(bt_ax, None), "pos": P(bt_ax),
+         "qlen": P(bt_ax), "block_table": P(bt_ax, None)}
+    t = {"cache": cache_t,
+         "tokens": jax.ShapeDtypeStruct((n_replicas * batch, q_len),
+                                        jnp.int32),
+         "pos": jax.ShapeDtypeStruct((n_replicas * batch,), jnp.int32),
+         "qlen": jax.ShapeDtypeStruct((n_replicas * batch,), jnp.int32),
+         "block_table": jax.ShapeDtypeStruct(
+             (n_replicas * batch, n_max_pages), jnp.int32)}
+    fn = _shard_map(per_shard, mesh,
+                    in_specs=(pspecs, s["cache"], s["tokens"], s["pos"],
+                              s["qlen"], s["block_table"]),
+                    out_specs=(P(bt_ax, None, "model"), s["cache"]))
     return fn, t, s
 
 

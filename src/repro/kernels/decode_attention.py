@@ -181,3 +181,99 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, length, *,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
     )(block_table, length, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Paged verify: a small query block per slot (speculative decoding)
+# ---------------------------------------------------------------------------
+
+def _paged_verify_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale, psz, n_max, nq):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+
+    # query i sees positions < length + i; the deepest query gates the page
+    @pl.when(ki * psz < length + nq - 1)
+    def _compute():
+        s = jax.lax.dot_general(
+            q_ref[0, 0], k_ref[0, 0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (nq, psz)
+        kpos = ki * psz + jax.lax.broadcasted_iota(jnp.int32, (nq, psz), 1)
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (nq, psz), 0)
+        mask = kpos < length + qpos
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None]) * mask
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_max - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_verify_attention(q, k_pages, v_pages, block_table, length, *,
+                           scale=None, interpret=False):
+    """Verify attention over a paged KV pool: Q queries per slot in one pass.
+
+    q: (B, H, Q, D) — query i of slot b sits at absolute position
+    ``length[b] - 1 + i`` (query 0 is the last accepted token, queries
+    1..Q-1 are drafted tokens whose KV the caller already wrote);
+    k_pages/v_pages: (n_pages, H, psz, D); block_table: (B, n_max);
+    length: (B,) valid tokens ahead of query 0 (pass ``pos + 1``, as in
+    ``paged_decode_attention``) -> (B, H, Q, D).
+
+    Per-query masking ``kpos < length + qpos`` gives each draft query its
+    causal prefix (draft j's KV sits at stream position length - 1 + j).
+    Same page streaming as the decode kernel — each cache byte still moves
+    off-chip once per step, now amortized over Q scored positions: the
+    bandwidth-bound speculation argument.
+    """
+    B, H, nq, D = q.shape
+    n_pages, Hk, psz, _ = k_pages.shape
+    assert Hk == H, (Hk, H)
+    n_max = block_table.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    grid = (B, H, n_max)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, nq, D), lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, psz, D),
+                         lambda b, h, j, bt, ln: (bt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, psz, D),
+                         lambda b, h, j, bt, ln: (bt[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, nq, D),
+                               lambda b, h, j, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((nq, D), jnp.float32),
+            pltpu.VMEM((nq,), jnp.float32),
+            pltpu.VMEM((nq,), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_verify_kernel, scale=scale, psz=psz,
+                               n_max=n_max, nq=nq)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, nq, D), q.dtype),
+        interpret=interpret,
+    )(block_table, length, q, k_pages, v_pages)

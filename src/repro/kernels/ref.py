@@ -53,6 +53,24 @@ def ref_decode_attention(q, k, v, length, scale=None):
     return jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def ref_verify_attention(q, k, v, length, scale=None):
+    """Speculative-verify oracle.  q: (B, H, Q, D); k/v: (B, H, S, D);
+    length: (B,) valid tokens ahead of query 0 (query i additionally sees
+    the i drafted positions length..length+i-1, mirroring the paged verify
+    kernel's ``kpos < length + qpos`` mask)."""
+    B, H, Q, D = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, :] < \
+        (length[:, None] + jnp.arange(Q)[None, :])[:, :, None]
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bhsd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def ref_ssd_scan(x, dt, B, C, A, state0=None):
     """Sequential SSD reference.  x: (S, H, P), dt: (S, H), B/C: (S, N),
     A: (H,) negative.  Returns (y (S,H,P), final_state (H,P,N))."""

@@ -210,8 +210,8 @@ def main():
                 if args.seq_kv:
                     cmd.append("--seq-kv")
                 r = subprocess.run(cmd, capture_output=True, text=True)
-                line = [l for l in r.stdout.splitlines()
-                        if l.startswith("RESULT ")]
+                line = [ln for ln in r.stdout.splitlines()
+                        if ln.startswith("RESULT ")]
                 if line:
                     rec = json.loads(line[-1][len("RESULT "):])
                 else:

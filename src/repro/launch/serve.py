@@ -28,6 +28,12 @@ preemptive DRR (paged engine only; see README §Serving).
 then splits TTFT per class; ``--clients N`` spreads requests across N
 client ids for the fair policy.
 
+``--speculative K`` (paged engine, attention-only archs) turns on
+speculative decoding: prompt-lookup self-drafts of up to K tokens are
+verified in one fused K+1-position step per tick, outputs stay
+token-identical to the one-token path, and the report adds
+accepted-tokens/tick and the draft hit rate.
+
 ``--dp N`` (paged engine only) runs N data-parallel replicas, each with
 ``--slots`` slots and its own replica-local page pool / prefix cache /
 scheduler; a router assigns requests by prefix affinity then page load,
@@ -73,6 +79,11 @@ def main(argv=None):
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix prefix sharing with copy-on-write pages "
                          "(implies --paged)")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="speculative decoding: prompt-lookup self-drafts "
+                         "of up to K tokens verified in one fused step "
+                         "(attention-only archs; implies --paged; outputs "
+                         "stay token-identical)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common system-prompt prefix of this "
                          "many tokens to every request")
@@ -101,6 +112,8 @@ def main(argv=None):
         ap.error("--preemption requires the paged engine (--paged)")
     if args.dp < 1:
         ap.error("--dp must be >= 1")
+    if args.speculative < 0:
+        ap.error("--speculative must be >= 0")
 
     import jax
     from repro.configs import get_config, reduced
@@ -132,13 +145,13 @@ def main(argv=None):
                                       preemption=args.preemption)
 
     sampler = SamplerConfig(temperature=args.temperature, top_k=40)
-    if args.paged or args.prefix_cache or args.dp > 1:
+    if args.paged or args.prefix_cache or args.dp > 1 or args.speculative:
         engine = ServingEngine.build_paged(
             cfg, plan, mesh, args.slots, args.seq_budget, params,
             page_size=args.page_size, n_pages=args.n_pages,
             prefill_chunk=args.prefill_chunk, sampler=sampler,
             prefix_cache=args.prefix_cache, scheduler=scheduler,
-            rng_seed=args.seed, dp=args.dp)
+            rng_seed=args.seed, dp=args.dp, speculative=args.speculative)
     else:
         dshape = ShapeConfig("serve", "decode", args.seq_budget, args.slots)
         pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
@@ -198,6 +211,15 @@ def main(argv=None):
               f"prefill_tokens_skipped={stats.prefill_tokens_skipped} "
               f"cow_copies={stats.cow_copies} "
               f"cached_pages={cached} evictions={evictions}")
+    if args.speculative:
+        print(f"speculative(k={args.speculative}): "
+              f"accepted_tokens_per_tick="
+              f"{stats.accepted_tokens_per_tick:.2f} "
+              f"draft_hit_rate={stats.draft_hit_rate:.2f} "
+              f"({stats.spec_draft_hits}/{stats.spec_draft_lookups} "
+              f"lookups) accepted={stats.spec_accepted}"
+              f"/{stats.spec_drafted} drafted "
+              f"spec_denied={stats.spec_denied}")
     if engine.cross_caches:
         print(f"cross_kv: hit_rate={stats.cross_hit_rate:.2f} "
               f"({stats.cross_hits}/{stats.cross_lookups} lookups) "

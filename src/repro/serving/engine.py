@@ -70,9 +70,29 @@ replicas' slots through one compiled decode step per tick; per-replica
 counters land in ``EngineStats.replicas``.  ``dp=1`` (the default) is the
 old single-pool engine, token-for-token.
 
+**Speculative decoding** (``speculative=k`` — paged, attention-only archs):
+each tick a self-drafting source (``serving.prefix_cache.PromptLookupDraft``
+— prompt-lookup n-grams over the slot's own context and the radix cache's
+token paths; no second model) proposes up to k tokens per slot, and ONE
+fused verify step (``core.steps.make_verify_step``) scores all k+1
+positions, writing their KV through the block table.  Rejection sampling
+(``serving.sampler.speculative_sample``) emits 1..k+1 tokens per slot,
+token-identical to the one-token path: row i is sampled exactly as the
+one-token path would, and drafting past row i survives only while the
+sample agrees with the draft.  Rejected-draft KV needs no device-side
+rollback — per-query validity masks positions past ``pos`` and the next
+step overwrites position ``pos`` before any read, so the host-side
+``pos``/block-table bookkeeping IS the trim.  Admission budgets +k tokens
+of page headroom all-or-nothing (``Admission.spec``; denied speculation
+still admits, the slot just decodes one token per tick), and a slot whose
+drafts keep getting rejected stops drafting and returns the headroom pages
+(``Scheduler.on_spec_trim`` — a refcount trim, safe against pages shared
+with the prefix cache).
+
 Sampling is schedule-invariant: every request draws from its own seeded
 RNG stream (``Request.rng``), so non-greedy outputs do not depend on
-admission order, batch composition, replica routing, or preemption points.
+admission order, batch composition, replica routing, or preemption points
+— and speculative decoding preserves this per-request stream exactly.
 
 The engine is mesh-agnostic: it drives whatever step functions
 ``core.steps`` built — 1-device CPU smoke or a full pod.
@@ -89,11 +109,18 @@ import numpy as np
 
 from repro.core.kvcache import (SCRATCH_PAGE, SCRATCH_SLAB, PageAllocator,
                                 SlabAllocator, cache_profile, pages_needed)
-from repro.serving.prefix_cache import CrossKVCache, RadixPrefixCache
+from repro.serving.prefix_cache import (CrossKVCache, PromptLookupDraft,
+                                        RadixPrefixCache)
 from repro.serving.router import Router
-from repro.serving.sampler import SamplerConfig, sample_from_logits
+from repro.serving.sampler import (SamplerConfig, sample_from_logits,
+                                   speculative_sample)
 from repro.serving.scheduler import (Admission, FCFSScheduler, Scheduler,
                                      effective_prompt)
+
+# consecutive zero-accept verify steps after which a slot stops drafting
+# and returns its draft-headroom pages (the speculation is clearly not
+# paying for its page + compute overhead on this request)
+SPEC_DISABLE_AFTER = 4
 
 
 @dataclass
@@ -125,6 +152,7 @@ class ReplicaStats:
     prefix_hits: int = 0
     cross_lookups: int = 0             # enc-dec frames-digest lookups
     cross_hits: int = 0
+    spec_denied: int = 0               # admissions denied draft headroom
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -146,6 +174,13 @@ class EngineStats:
     cross_hits: int = 0                # ... served from a shared encode
     cross_encodes: int = 0             # cross-KV write steps actually run
     slab_restores: int = 0             # preempted SSM state reloads
+    spec_steps: int = 0                # verify slot-steps with a draft
+    spec_drafted: int = 0              # draft tokens proposed to the verifier
+    spec_accepted: int = 0             # draft tokens accepted
+    spec_emitted: int = 0              # tokens emitted by drafted slot-steps
+    spec_draft_lookups: int = 0        # draft-source queries
+    spec_draft_hits: int = 0           # ... that produced a usable draft
+    spec_denied: int = 0               # admissions denied draft headroom
     tpot_s: list = field(default_factory=list)
     request_ttft: dict = field(default_factory=dict)   # rid -> seconds
     replicas: List[ReplicaStats] = field(default_factory=list)
@@ -154,6 +189,18 @@ class EngineStats:
     def ttft_s(self) -> list:
         """TTFT samples in first-token order (derived per request)."""
         return list(self.request_ttft.values())
+
+    @property
+    def accepted_tokens_per_tick(self) -> float:
+        """Tokens emitted per drafted verify slot-step (> 1.0 means the
+        speculation is beating the one-token path)."""
+        return self.spec_emitted / self.spec_steps if self.spec_steps \
+            else 0.0
+
+    @property
+    def draft_hit_rate(self) -> float:
+        return self.spec_draft_hits / self.spec_draft_lookups \
+            if self.spec_draft_lookups else 0.0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -173,7 +220,8 @@ class ServingEngine:
                  paged: bool = False, page_size: int = 16,
                  n_pages: int = 0, prefill_chunk: int = 0,
                  prefix_cache: bool = False, scheduler=None,
-                 rng_seed: int = 0, dp: int = 1, n_slabs: int = 0):
+                 rng_seed: int = 0, dp: int = 1, n_slabs: int = 0,
+                 speculative: int = 0, verify_fn=None):
         from repro.core import steps as _steps
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
         assert dp >= 1, dp
@@ -262,6 +310,28 @@ class ServingEngine:
             assert not prefix_cache, "prefix cache requires the paged engine"
             self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
                                                seq_budget)
+        self.speculative = int(speculative)
+        self.verify_fn = verify_fn
+        self.draft_sources: List[PromptLookupDraft] = []
+        self.spec_miss = np.zeros(self.B, np.int32)
+        if self.speculative > 0:
+            if not paged:
+                raise ValueError(
+                    "speculative decoding requires the paged engine")
+            if prof != {"kv"}:
+                raise ValueError(
+                    f"speculative decoding is unsupported for arch "
+                    f"'{cfg.name}': the k-token verify step covers "
+                    f"attention-only decoders (cache kinds {sorted(prof)}) "
+                    f"— SSM recurrences advance one token per step and "
+                    f"enc-dec verify is not implemented")
+            if self.verify_fn is None:
+                vfn, _, _ = _steps.make_verify_step(
+                    cfg, plan, mesh, batch_slots, self.speculative + 1,
+                    n_pages, page_size, self.n_max_pages, n_replicas=dp)
+                self.verify_fn = jax.jit(vfn)
+            self.draft_sources = [PromptLookupDraft(self.prefix_caches[r])
+                                  for r in range(dp)]
         # ``scheduler`` is either a ready instance (dp=1 only) or a factory
         # (a Scheduler subclass / functools.partial): factories receive the
         # engine-owned shared state, so callers can pass e.g.
@@ -286,6 +356,7 @@ class ServingEngine:
                       cross_pages_per_req=(self.n_cross_pages
                                            if self.has_cross else 0),
                       kv_pages=not paged or "kv" in prof,
+                      spec_tokens=self.speculative if paged else 0,
                       stats=self.stats)
                 for r in range(dp)]
         for r, s in enumerate(self.scheds):
@@ -306,9 +377,11 @@ class ServingEngine:
                     prefill_chunk: int = 16, eos_id: int = 1,
                     sampler: Optional[SamplerConfig] = None,
                     prefix_cache: bool = False, scheduler=None,
-                    rng_seed: int = 0, dp: int = 1, n_slabs: int = 0):
+                    rng_seed: int = 0, dp: int = 1, n_slabs: int = 0,
+                    speculative: int = 0):
         """Construct a paged engine, compiling its (chunk, decode) pair
-        (plus the cross-KV write step for enc-dec archs).
+        (plus the cross-KV write step for enc-dec archs, and the k+1-token
+        verify step when ``speculative=k`` > 0).
 
         ``n_pages`` is the PER-REPLICA pool size and defaults to full
         occupancy (every slot at budget, plus every slot's cross-KV pages
@@ -335,12 +408,19 @@ class ServingEngine:
         chunk_fn, _, _ = _steps.make_prefill_chunk_step(
             cfg, plan, mesh, prefill_chunk, n_pages, page_size, n_max,
             n_replicas=dp, n_slabs=n_slabs if has_ssm else 0)
+        ver = None
+        if speculative > 0:
+            vfn, _, _ = _steps.make_verify_step(
+                cfg, plan, mesh, batch_slots, speculative + 1, n_pages,
+                page_size, n_max, n_replicas=dp)
+            ver = jax.jit(vfn)
         return cls(cfg, plan, mesh, batch_slots, seq_budget, params,
                    jax.jit(chunk_fn), jax.jit(dec), eos_id=eos_id,
                    sampler=sampler, paged=True, page_size=page_size,
                    n_pages=n_pages, prefill_chunk=prefill_chunk,
                    prefix_cache=prefix_cache, scheduler=scheduler,
-                   rng_seed=rng_seed, dp=dp, n_slabs=n_slabs)
+                   rng_seed=rng_seed, dp=dp, n_slabs=n_slabs,
+                   speculative=speculative, verify_fn=ver)
 
     # ------------------------------------------------------------------ API
     @property
@@ -541,6 +621,7 @@ class ServingEngine:
         self.admissions[b] = None
         self.pos[b] = 0
         self.last_token[b] = 0
+        self.spec_miss[b] = 0
         if self.paged:
             self.slot_state[b] = None
             self.prefill_done[b] = 0
@@ -821,6 +902,13 @@ class ServingEngine:
                   and self.slot_state[b] == "decode"]
         if not active:
             return
+        if self.speculative:
+            drafts = self._plan_drafts(active)
+            if drafts is not None:
+                return self._verify_tick_paged(active, drafts)
+            # every draft came back empty (cold cache / no repeats):
+            # fall through to the plain one-token step — identical to
+            # running with speculation off
         # idle / prefilling lanes ride along pointed at the scratch page
         # (and scratch slab / scratch cross pages), so full-batch decode
         # never touches a live slab or a prefilling slot's pages
@@ -849,6 +937,93 @@ class ServingEngine:
             req = self.admissions[b].req
             self.pos[b] += 1        # the decode step wrote last_token's KV
             self._emit(b, req, self._sample_row(logits, b, req), now)
+
+    # ---------------------------------------------------- speculative decode
+    def _plan_drafts(self, active: List[int]):
+        """Draft up to k tokens per speculation-capable active slot.
+        -> {slot: draft tokens} holding only non-empty drafts, or None
+        when nothing drafted (the tick falls back to the one-token step).
+
+        A slot whose drafts were rejected ``SPEC_DISABLE_AFTER`` times in
+        a row stops drafting for good and returns its headroom pages via
+        ``on_spec_trim`` — a refcount trim, because those tail pages may
+        meanwhile have been donated to (or matched by) the prefix cache."""
+        k = self.speculative
+        drafts = {}
+        for b in active:
+            adm = self.admissions[b]
+            if not adm.spec:
+                continue
+            req = adm.req
+            if self.spec_miss[b] >= SPEC_DISABLE_AFTER:
+                keep = pages_needed(len(req.prompt) + req.max_new_tokens,
+                                    self.page_size)
+                self.scheds[self._rep(b)].on_spec_trim(adm, keep)
+                continue
+            self.stats.spec_draft_lookups += 1
+            draft = self.draft_sources[self._rep(b)].draft(
+                effective_prompt(req), k)
+            # cap to writable coverage: verify writes KV at pos..pos+kd,
+            # which must stay inside the slot's pages and the seq budget
+            cov = len(adm.pages) * self.page_size
+            kd = min(len(draft), cov - 1 - int(self.pos[b]),
+                     self.S - 1 - int(self.pos[b]))
+            if kd <= 0:
+                self.spec_miss[b] += 1
+                continue
+            self.stats.spec_draft_hits += 1
+            drafts[b] = [int(t) for t in draft[:kd]]
+        return drafts or None
+
+    def _verify_tick_paged(self, active: List[int], drafts: dict):
+        """One fused verify step scores k+1 positions for every active
+        slot (draftless slots ride along as qlen=1 plain decode rows);
+        rejection sampling then emits 1..kd+1 tokens per slot.
+
+        Rollback of rejected-draft KV is pure host bookkeeping: ``pos``
+        advances only past emitted tokens, per-query validity masks
+        positions >= the current ``pos``, and the next step's write lands
+        on position ``pos`` before any read — so the stale KV is never
+        observed and the pages stay mapped for reuse."""
+        Q = self.speculative + 1
+        toks = np.zeros((self.B, Q), np.int32)
+        qlen = np.ones(self.B, np.int32)
+        pos = np.zeros(self.B, np.int32)
+        bt = np.full((self.B, self.n_max_pages), SCRATCH_PAGE, np.int32)
+        for b in active:
+            d = drafts.get(b, [])
+            toks[b, 0] = self.last_token[b]
+            toks[b, 1:1 + len(d)] = d
+            qlen[b] = len(d) + 1
+            pos[b] = self.pos[b]
+            bt[b] = self._bt_row(b)
+        with self.mesh:
+            logits, self.cache = self.verify_fn(
+                self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(qlen), jnp.asarray(bt))
+        logits = np.asarray(jax.device_get(logits)).astype(np.float32)
+        now = time.monotonic()
+        for b in active:
+            req = self.admissions[b].req
+            d = drafts.get(b, [])
+            out = speculative_sample(logits[b, :len(d) + 1], d,
+                                     self.sampler, self.cfg.vocab_size,
+                                     req.rng)
+            emitted = 0
+            for tok in out:
+                self.pos[b] += 1    # verify wrote this position's KV
+                self._emit(b, req, tok, now)
+                emitted += 1
+                if self.admissions[b] is None:
+                    break           # retired mid-accept: drop the tail
+            if d:
+                self.stats.spec_steps += 1
+                self.stats.spec_drafted += len(d)
+                self.stats.spec_accepted += emitted - 1
+                self.stats.spec_emitted += emitted
+                if self.admissions[b] is not None:   # retired slots reset
+                    self.spec_miss[b] = 0 if emitted > 1 \
+                        else self.spec_miss[b] + 1
 
 
 def _splice_cache(big, lane, b):

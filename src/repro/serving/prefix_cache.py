@@ -219,6 +219,64 @@ class RadixPrefixCache:
         return freed
 
 
+class PromptLookupDraft:
+    """Self-drafting source for speculative decoding — no second model.
+
+    Prompt-lookup (n-gram) drafting: the longest trailing n-gram of the
+    slot's context (prompt + emitted tokens) is matched against its most
+    recent earlier occurrence, first within the context itself, then along
+    the radix prefix cache's stored token paths; the k tokens that followed
+    that occurrence become the draft.  Drafts are proposals only — the
+    verify step scores them against the real model and rejection keeps
+    outputs token-identical — so a bad draft costs pages, never accuracy.
+    An empty return means "no guess": the engine falls back to the
+    one-token decode path for that slot this tick."""
+
+    def __init__(self, prefix_cache: Optional[RadixPrefixCache] = None,
+                 max_ngram: int = 3):
+        self.prefix_cache = prefix_cache
+        self.max_ngram = max_ngram
+
+    def draft(self, context, k: int) -> List[int]:
+        """Propose up to ``k`` continuation tokens for ``context``."""
+        if k <= 0 or len(context) < 2:
+            return []
+        toks = [int(t) for t in context]
+        for n in range(min(self.max_ngram, len(toks) - 1), 0, -1):
+            gram = toks[-n:]
+            # most recent earlier occurrence within the context itself
+            for i in range(len(toks) - n - 1, -1, -1):
+                if toks[i:i + n] == gram:
+                    out = toks[i + n:i + n + k]
+                    if out:
+                        return out
+            # then along cached token paths (other requests' prompts)
+            best: List[int] = []
+            for path in self._cache_paths():
+                for i in range(len(path) - n, -1, -1):
+                    if list(path[i:i + n]) == gram:
+                        out = [int(t) for t in path[i + n:i + n + k]]
+                        if len(out) > len(best):
+                            best = out
+                        break
+            if best:
+                return best
+        return []
+
+    def _cache_paths(self):
+        """Root-to-leaf token sequences of the radix cache (leaves subsume
+        every interior path, so they are the whole searchable corpus)."""
+        if self.prefix_cache is None:
+            return
+        stack = [((), self.prefix_cache.root)]
+        while stack:
+            prefix, node = stack.pop()
+            path = prefix + node.key
+            if not node.children and node is not self.prefix_cache.root:
+                yield path
+            stack.extend((path, ch) for ch in node.children.values())
+
+
 class CrossKVCache:
     """Encoder cross-KV sharing: frames digest -> refcounted page run.
 

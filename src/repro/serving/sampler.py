@@ -40,6 +40,33 @@ def sample_from_logits(logits: np.ndarray, cfg: SamplerConfig,
                      for b in range(lg.shape[0])], np.int32)
 
 
+def speculative_sample(logits: np.ndarray, draft, cfg: SamplerConfig,
+                       vocab_size: int, rng: np.random.RandomState):
+    """Accept/emit loop over verify-step logits — the deterministic-draft
+    special case of rejection sampling, token-identical to the one-token
+    path by construction.
+
+    ``logits``: (Q, V_pad) where row i is the model's next-token
+    distribution after consuming the last accepted token plus draft[:i];
+    ``draft``: the kd <= Q-1 proposed tokens.  Row i is sampled exactly as
+    ``sample_from_logits`` would on the one-token path (greedy consumes no
+    RNG; temperature > 0 consumes one draw per emitted row, in emission
+    order), the sampled token is emitted, and drafting continues past row
+    i only while the sample agrees with draft[i].  Because the draft is a
+    point mass, "target sample == draft token" IS the rejection test, and
+    the first disagreeing row already holds the corrected sample — no
+    residual-distribution resample is needed.  -> emitted tokens
+    (1 <= len <= len(draft) + 1)."""
+    out = []
+    for i in range(len(draft) + 1):
+        tok = int(sample_from_logits(logits[i:i + 1], cfg, vocab_size,
+                                     rng)[0])
+        out.append(tok)
+        if i < len(draft) and tok != int(draft[i]):
+            break
+    return out
+
+
 def merged_topk_sample(local_logits_gathered, cfg, vocab_size, rng):
     """Exact sampling from per-shard top-k candidates (serving on a TP mesh):
     the global top-k is a subset of the union of per-shard top-k's.

@@ -92,7 +92,11 @@ class Admission:
     slab: the slot's recurrent-state slab id (SSM/hybrid archs).
     cross_pages: the slot's read-only cross-KV page run (enc-dec archs);
     needs_encode marks a frames-digest miss — the engine must run the
-    cross-KV write step before this slot's first prefill chunk."""
+    cross-KV write step before this slot's first prefill chunk.
+    spec: the slot's page run includes draft headroom (+spec_tokens of
+    coverage past prompt + max_new_tokens), so the engine may run the
+    k-token verify step on it; False means speculation was denied at
+    admission (pool pressure) and the slot decodes one token per tick."""
     slot: int
     req: object
     pages: Optional[List[int]] = None
@@ -102,6 +106,7 @@ class Admission:
     slab: Optional[int] = None
     cross_pages: Optional[List[int]] = None
     needs_encode: bool = False
+    spec: bool = False
 
 
 class Scheduler:
@@ -146,6 +151,11 @@ class Scheduler:
         salvage its pages and re-queue the request."""
         raise NotImplementedError
 
+    def on_spec_trim(self, adm: Admission, keep: int) -> None:
+        """The engine stopped speculating on adm's slot — return the draft
+        headroom pages past block-table index ``keep``; default: no-op
+        (the contiguous engine holds no pages)."""
+
 
 class FCFSScheduler(Scheduler):
     """First-come-first-served admission (the seed engine's policy).
@@ -160,7 +170,7 @@ class FCFSScheduler(Scheduler):
     def __init__(self, *, seq_budget: int, allocator=None, page_size: int = 0,
                  prefix_cache=None, stats=None, slab_allocator=None,
                  cross_cache=None, cross_pages_per_req: int = 0,
-                 kv_pages: bool = True):
+                 kv_pages: bool = True, spec_tokens: int = 0):
         self.queue: collections.deque = collections.deque()
         self.seq_budget = seq_budget
         self.allocator = allocator
@@ -172,6 +182,10 @@ class FCFSScheduler(Scheduler):
         self.slab_allocator = slab_allocator        # SSM/hybrid archs
         self.cross_cache = cross_cache              # enc-dec archs
         self.cross_pages_per_req = cross_pages_per_req
+        # speculative-decoding draft headroom: admissions try to budget
+        # +spec_tokens of extra page coverage so the verify step can write
+        # drafted positions past prompt + max_new_tokens (0 = off)
+        self.spec_tokens = spec_tokens
         # cross pages planned this tick but not yet written: a second
         # same-frame admission in the same plan() round shares them
         # instead of running a duplicate encode
@@ -392,6 +406,25 @@ class FCFSScheduler(Scheduler):
                         self.slab_allocator.free(slab)
                     return None
                 self._pending_cross[key] = list(cross_pages)
+        # ---- speculative draft headroom: +spec_tokens of page coverage so
+        # the verify step can write drafted positions past the base budget.
+        # Opportunistic and all-or-nothing: on pool pressure the request is
+        # still admitted, just without speculation (adm.spec=False), and no
+        # cache eviction runs — hot resident prefixes outrank draft room.
+        spec, spec_pages = False, []
+        if self.spec_tokens > 0 and self.kv_pages:
+            n_max = self.seq_budget // self.psz
+            extra = min(pages_needed(L + remaining_new_tokens(req) +
+                                     self.spec_tokens, self.psz),
+                        n_max) - total
+            spec_pages = alloc.alloc(extra)
+            if spec_pages is None:
+                spec_pages = []
+                for st in (self.stats, self.replica_stats):
+                    if st is not None:
+                        st.spec_denied += 1
+            else:
+                spec = True
         # count stats on admission only — a blocked head-of-line request is
         # re-planned every tick and must not inflate the hit rates
         if self.prefix_cache is not None:
@@ -407,9 +440,11 @@ class FCFSScheduler(Scheduler):
         # fresh[0] sits at block-table index n_full: exactly where the COW
         # copy of the partial page belongs
         cow = (cow_src, fresh[0]) if cow_src is not None else None
-        return Admission(slot=slot, req=req, pages=shared + fresh,
+        return Admission(slot=slot, req=req,
+                         pages=shared + fresh + spec_pages,
                          cached_len=cached_len, cow=cow, slab=slab,
-                         cross_pages=cross_pages, needs_encode=needs_encode)
+                         cross_pages=cross_pages, needs_encode=needs_encode,
+                         spec=spec)
 
     # ------------------------------------------------------------- events
     def on_cow_done(self, adm: Admission) -> None:
@@ -443,6 +478,18 @@ class FCFSScheduler(Scheduler):
     def on_finish(self, adm: Admission) -> None:
         if self.paged:
             self._release(adm)
+
+    def on_spec_trim(self, adm: Admission, keep: int) -> None:
+        """The engine stopped speculating on adm's slot (persistent draft
+        misses) — return the headroom pages past block-table index ``keep``
+        to the pool.  Tail pages of a partially rejected draft may be
+        shared with the radix prefix cache by the time the trim runs (a
+        preemption donated them, or an identical prompt was inserted), so
+        this drops a *reference* per page (``allocator.trim``) rather than
+        assert-freeing."""
+        self.allocator.trim(adm.pages[keep:])
+        del adm.pages[keep:]
+        adm.spec = False
 
     def on_preempt(self, adm: Admission, resident_tokens) -> None:
         """Salvage an evicted slot: donate its resident *full* pages to the

@@ -19,8 +19,8 @@ import itertools
 import numpy as np
 
 from repro.configs import get_config
-from repro.sim.siracusa import SiracusaConfig
 from repro.sim.simulator import simulate_model
+from repro.sim.siracusa import SiracusaConfig
 from repro.sim.workload import mobilebert_block, tinyllama_block
 
 
@@ -86,18 +86,18 @@ def search():
                                      demand_efficiency=eta,
                                      kernel_k0=k0, mipi_latency_s=lat)
         m = paper_metrics(cfg)
-        l = loss(m)
-        if l < best[0]:
-            best = (l, (mac, l3, eta, k0, lat),
+        lv = loss(m)
+        if lv < best[0]:
+            best = (lv, (mac, l3, eta, k0, lat),
                     {k: m[k] for k in TARGETS})
     return best
 
 
 def main():
-    l, params, metrics = search()
+    lv, params, metrics = search()
     mac, l3, eta, k0, lat = params
     print(f"best fit: macs/cyc/core={mac} l3_bw={l3/1e9:.2f}GB/s eta={eta} "
-          f"k0={k0} mipi_lat={lat*1e6:.1f}us  (logloss {l:.4f})")
+          f"k0={k0} mipi_lat={lat*1e6:.1f}us  (logloss {lv:.4f})")
     print(f"{'metric':20s} {'paper':>8s} {'sim':>8s} {'ratio':>7s}")
     for k, tgt in TARGETS.items():
         print(f"{k:20s} {tgt:8.2f} {metrics[k]:8.2f} {metrics[k]/tgt:7.2f}")

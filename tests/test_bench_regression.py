@@ -35,7 +35,7 @@ def test_warn_only_then_gate(tmp_path):
     assert _run(mod, tmp_path, _payload(100.0, 10.0), hist, 3) == 0
     # run 4: >= 3 prior runs; healthy numbers near the median pass
     assert _run(mod, tmp_path, _payload(95.0, 11.0), hist, 4) == 0
-    # run 5: throughput collapse beyond the 50% tolerance fails
+    # run 5: throughput collapse beyond the 25% default tolerance fails
     assert _run(mod, tmp_path, _payload(20.0, 10.0), hist, 5) == 1
     # run 6: TTFT blow-up fails too
     assert _run(mod, tmp_path, _payload(100.0, 80.0), hist, 6) == 1

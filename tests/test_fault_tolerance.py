@@ -30,7 +30,8 @@ def test_crash_resume_matches_uninterrupted(tmp_path):
     # uninterrupted reference
     r0 = _run_train(str(tmp_path / "ref"), steps=15)
     assert r0.returncode == 0, r0.stderr[-2000:]
-    ref_line = [l for l in r0.stdout.splitlines() if l.startswith("step    15")]
+    ref_line = [ln for ln in r0.stdout.splitlines()
+                if ln.startswith("step    15")]
     assert ref_line, r0.stdout
 
     # crashed at step 8 (checkpoint exists at 5), then resumed
@@ -40,7 +41,8 @@ def test_crash_resume_matches_uninterrupted(tmp_path):
     r2 = _run_train(str(tmp_path / "ft"), steps=15)
     assert r2.returncode == 0, r2.stderr[-2000:]
     assert "[resume] step 5" in r2.stdout
-    res_line = [l for l in r2.stdout.splitlines() if l.startswith("step    15")]
+    res_line = [ln for ln in r2.stdout.splitlines()
+                if ln.startswith("step    15")]
     assert res_line, r2.stdout
 
     # same final loss (same params/opt/data stream => identical trajectory)

@@ -111,6 +111,69 @@ def test_pallas_paged_decode_kernel():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_paged_verify_attention_matches_ref():
+    """Pure-JAX Q-query verify attention (the engine's spec path) against
+    the ref oracle; cur_pos semantics (pos of query 0) vs the oracle's
+    length = pos + 1."""
+    from repro.core.attention import paged_verify_attention
+    from repro.kernels import ref
+    rng = np.random.RandomState(2)
+    B, G, R, Q, D, psz, n_max = 3, 2, 2, 5, 16, 4, 8
+    n_pages = B * n_max + 1
+    S = n_max * psz
+    pos = np.array([4, 19, 27], np.int32)    # query 0's absolute position
+    q = rng.randn(B, G, R, Q, D).astype(np.float32)
+    k = rng.randn(B, G, S, D).astype(np.float32)
+    v = rng.randn(B, G, S, D).astype(np.float32)
+    bt = _random_tables(rng, B, n_max, n_pages)
+    kp = _scatter_to_pages(k, bt, psz, n_pages)
+    vp = _scatter_to_pages(v, bt, psz, n_pages)
+    got = paged_verify_attention(jnp.asarray(q), jnp.asarray(kp),
+                                 jnp.asarray(vp), jnp.asarray(bt),
+                                 jnp.asarray(pos))
+    # fold (G, R) -> H for the ref oracle's (B, H, Q, D) layout
+    qh = q.reshape(B, G * R, Q, D)
+    kh = np.repeat(k, R, axis=1)
+    vh = np.repeat(v, R, axis=1)
+    expect = ref.ref_verify_attention(jnp.asarray(qh), jnp.asarray(kh),
+                                      jnp.asarray(vh),
+                                      jnp.asarray(pos + 1))
+    np.testing.assert_allclose(
+        np.asarray(got).reshape(B, G * R, Q, D), np.asarray(expect),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_paged_verify_kernel():
+    from repro.kernels import ref
+    from repro.kernels.decode_attention import paged_verify_attention
+    rng = np.random.RandomState(3)
+    B, H, Q, D, psz, n_max = 3, 4, 5, 64, 8, 5
+    n_pages = B * n_max + 1
+    S = n_max * psz
+    lens = np.array([13, 36, 1], np.int32)   # pos + 1, as in paged decode
+    q = rng.randn(B, H, Q, D).astype(np.float32)
+    k = rng.randn(B, H, S, D).astype(np.float32)
+    v = rng.randn(B, H, S, D).astype(np.float32)
+    bt = _random_tables(rng, B, n_max, n_pages)
+    kp = _scatter_to_pages(k, bt, psz, n_pages)
+    vp = _scatter_to_pages(v, bt, psz, n_pages)
+    out = paged_verify_attention(jnp.asarray(q), jnp.asarray(kp),
+                                 jnp.asarray(vp), jnp.asarray(bt),
+                                 jnp.asarray(lens), interpret=True)
+    expect = ref.ref_verify_attention(jnp.asarray(q), jnp.asarray(k),
+                                      jnp.asarray(v), jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+    # Q = 1 degenerates to the decode kernel's contract
+    out1 = paged_verify_attention(jnp.asarray(q[:, :, :1]), jnp.asarray(kp),
+                                  jnp.asarray(vp), jnp.asarray(bt),
+                                  jnp.asarray(lens), interpret=True)
+    exp1 = ref.ref_decode_attention(jnp.asarray(q[:, :, 0]), jnp.asarray(k),
+                                    jnp.asarray(v), jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(out1[:, :, 0]), np.asarray(exp1),
+                               rtol=1e-4, atol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # step level: chunked prefill + paged decode == exact-length prefill + decode
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ def _load(name):
     path = os.path.join(ROOT, name + ".txt")
     if not os.path.exists(path):
         pytest.skip(f"{name} not present (dry-run artifacts not generated)")
-    lines = [l for l in open(path) if l.startswith("RESULT ")]
+    lines = [ln for ln in open(path) if ln.startswith("RESULT ")]
     assert lines, path
     rec = json.loads(lines[-1][len("RESULT "):])
     assert rec["status"] == "ok", rec

@@ -1,0 +1,243 @@
+"""Speculative decoding: prompt-lookup draft-source edge cases, the
+allocator trim path for partially rejected drafts (shared tail pages are
+decref'd, never assert-freed), scheduler draft-headroom budgeting, and
+engine-level identity under an empty draft corpus, drafts crossing page
+boundaries, forced preemption mid-decode, and page-budget exhaustion
+(speculation denied but the request still admitted)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import model
+from repro.core.kvcache import PageAllocator, pages_needed
+from repro.core.partition import ShardingPlan
+from repro.serving import Request, ServingEngine
+from repro.serving.prefix_cache import PromptLookupDraft, RadixPrefixCache
+from repro.serving.scheduler import FCFSScheduler
+
+PLAN = ShardingPlan(tp=1, kv_cache_dtype="float32")
+
+
+def _cfg():
+    return reduced(get_config("tinyllama-42m"), dtype="float32")
+
+
+def toks(*ids):
+    return np.asarray(ids, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# draft source: prompt lookup over context + radix-cache corpus
+# ---------------------------------------------------------------------------
+
+def test_prompt_lookup_in_context_ngram():
+    d = PromptLookupDraft()
+    # trailing trigram [1,2,3] recurs at the start; continuation follows it
+    assert d.draft([1, 2, 3, 9, 8, 7, 1, 2, 3], 2) == [9, 8]
+    # k clips to what actually follows the match
+    assert d.draft([1, 2, 3, 9, 1, 2, 3], 8) == [9, 1, 2, 3]
+    # most recent (rightmost) match wins
+    assert d.draft([5, 6, 1, 5, 6, 2, 5, 6], 1) == [2]
+
+
+def test_prompt_lookup_falls_back_to_cache_paths():
+    a = PageAllocator(8)
+    cache = RadixPrefixCache(a, 4)
+    pages = a.alloc(2)
+    cache.insert(toks(5, 6, 7, 8, 4, 4, 4, 4), pages)
+    a.decref(pages)                       # cache-owned
+    d = PromptLookupDraft(cache)
+    # no in-context repeat of [9, 5, 6, 7]'s tail; the cached path has it
+    assert d.draft([9, 9, 5, 6, 7], 3) == [8, 4, 4]
+
+
+def test_prompt_lookup_empty_cases():
+    d = PromptLookupDraft()
+    assert d.draft([], 4) == []           # no context at all
+    assert d.draft([1], 4) == []          # too short for any n-gram
+    assert d.draft([1, 2, 3, 4], 0) == []   # k = 0
+    assert d.draft([1, 2, 3, 4], 4) == []   # distinct tokens: no repeat
+    # fresh (empty) radix cache adds nothing
+    fresh = PromptLookupDraft(RadixPrefixCache(PageAllocator(4), 4))
+    assert fresh.draft([1, 2, 3, 4], 4) == []
+
+
+# ---------------------------------------------------------------------------
+# allocator: trim decrefs (satellite bugfix) — tail pages of a partially
+# rejected draft may be shared with the prefix cache
+# ---------------------------------------------------------------------------
+
+def test_trim_releases_shared_tail_without_freeing():
+    a = PageAllocator(8)
+    pages = a.alloc(4)
+    a.incref(pages[2:])                   # tail shared (prefix cache ref)
+    # free() on the shared tail would be a refcount-corrupting bug
+    with pytest.raises(AssertionError, match="decref"):
+        a.free(pages[2:])
+    a.trim(pages[2:])                     # slot's own ref drops cleanly
+    assert a.refcount(pages[2]) == 1      # cache still holds the pages
+    assert a.n_free == 3                  # nothing returned to the pool yet
+    a.trim(pages[:2])                     # sole-owner tail actually frees
+    assert a.n_free == 5
+    a.decref(pages[2:])                   # cache lets go -> fully reclaimed
+    assert a.n_free == 7
+
+
+def test_scheduler_spec_headroom_and_trim():
+    a = PageAllocator(32)
+    s = FCFSScheduler(seq_budget=32, allocator=a, page_size=4,
+                      spec_tokens=4)
+    req = Request(rid=0, prompt=toks(*range(2, 10)), max_new_tokens=8)
+    s.submit(req)
+    (adm,) = s.plan([0])
+    # 8 prompt + 8 new = 4 pages, +4 draft tokens of coverage = 5 pages
+    assert adm.spec and len(adm.pages) == pages_needed(8 + 8 + 4, 4)
+    free_before = a.n_free
+    keep = pages_needed(8 + 8, 4)
+    s.on_spec_trim(adm, keep)
+    assert not adm.spec and len(adm.pages) == keep
+    assert a.n_free == free_before + 1    # the headroom page came back
+    s.on_finish(adm)
+    assert a.n_free == 31
+
+
+def test_scheduler_denies_spec_but_still_admits():
+    base = pages_needed(8 + 8, 4)
+    a = PageAllocator(base + 1)           # exactly base demand (+scratch)
+    s = FCFSScheduler(seq_budget=32, allocator=a, page_size=4,
+                      spec_tokens=4)
+    req = Request(rid=0, prompt=toks(*range(2, 10)), max_new_tokens=8)
+    s.submit(req)
+    (adm,) = s.plan([0])                  # all-or-nothing extra alloc fails
+    assert adm is not None and not adm.spec
+    assert len(adm.pages) == base and a.n_free == 0
+    s.on_finish(adm)
+    assert a.n_free == base
+
+
+# ---------------------------------------------------------------------------
+# engine level: identity against the one-token engine across edge cases
+# ---------------------------------------------------------------------------
+
+def _repetitive_prompts(cfg, n=4, seed=11):
+    """Shared prefix + tiled motifs: the traffic prompt lookup drafts on."""
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(2, cfg.vocab_size, 8).astype(np.int32)
+    out = []
+    for i in range(n):
+        motif = rng.randint(2, cfg.vocab_size, 3 + i % 2).astype(np.int32)
+        body = np.tile(motif, 4)[: 8 + 2 * (i % 3)]
+        out.append(np.concatenate([shared, body]).astype(np.int32))
+    return out
+
+
+def _run(cfg, params, mesh, prompts, *, speculative, max_new=10, slots=2,
+         SB=64, page_size=8, n_pages=0, prefix_cache=True, preempt_at=()):
+    eng = ServingEngine.build_paged(
+        cfg, PLAN, mesh, slots, SB, params, page_size=page_size,
+        prefill_chunk=8, n_pages=n_pages, prefix_cache=prefix_cache,
+        speculative=speculative)
+    reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    tick = 0
+    while (eng.has_pending() or
+           any(a is not None for a in eng.admissions)) and tick < 3000:
+        if tick in preempt_at:
+            for b in range(eng.B):
+                if eng.admissions[b] is not None:
+                    eng.preempt(b)
+                    break
+        eng.tick()
+        tick += 1
+    assert all(r.done for r in reqs), \
+        [r.rid for r in reqs if not r.done]
+    # page accounting: everything free or cache-held, per replica
+    for rr in range(eng.R):
+        a = eng.allocators[rr]
+        cached = (eng.prefix_caches[rr].n_cached_pages
+                  if eng.prefix_caches[rr] is not None else 0)
+        assert a.n_free + cached == a.n_pages - a.n_reserved, rr
+    return {r.rid: tuple(r.out_tokens) for r in reqs}, eng.stats
+
+
+@pytest.mark.slow
+def test_empty_draft_corpus_falls_back_to_one_token(mesh1):
+    """Distinct non-repetitive prompts: prompt lookup finds nothing, every
+    tick falls through to the plain one-token step, outputs identical."""
+    cfg = _cfg()
+    params = model.init_params(cfg, PLAN)
+    rng = np.random.RandomState(4)
+    # sampled WITHOUT replacement: no token ever repeats inside a prompt
+    prompts = [rng.choice(np.arange(2, cfg.vocab_size), size=9,
+                          replace=False).astype(np.int32)
+               for _ in range(3)]
+    ref, _ = _run(cfg, params, mesh1, prompts, speculative=0, max_new=4)
+    got, st = _run(cfg, params, mesh1, prompts, speculative=4, max_new=4)
+    assert got == ref
+    # the lookups that did run came back empty (the prompts are unique
+    # token sets; greedy continuations could in principle loop, so only
+    # the prompt-driven early ticks are asserted draft-free)
+    assert st.spec_draft_lookups > 0
+
+
+@pytest.mark.slow
+def test_draft_crossing_page_boundary_identity(mesh1):
+    """Small pages force accepted drafts to straddle page boundaries; the
+    verify write path must land KV in the right pages."""
+    cfg = _cfg()
+    params = model.init_params(cfg, PLAN)
+    prompts = _repetitive_prompts(cfg)
+    ref, _ = _run(cfg, params, mesh1, prompts, speculative=0, page_size=4,
+                  max_new=12)
+    got, st = _run(cfg, params, mesh1, prompts, speculative=4, page_size=4,
+                   max_new=12)
+    assert got == ref
+    # with 4-token pages and 12 new tokens, accepted k>1 bursts must have
+    # crossed page boundaries; vacuous acceptance would hide the bug
+    assert st.spec_accepted > 0, "no draft token was ever accepted"
+
+
+@pytest.mark.slow
+def test_forced_preemption_mid_decode_identity(mesh1):
+    """Preempting slots between ticks (including between verify steps)
+    leaves outputs identical to the undisturbed one-token oracle: resume
+    re-prefills only accepted tokens, never speculative tail KV."""
+    cfg = _cfg()
+    params = model.init_params(cfg, PLAN)
+    prompts = _repetitive_prompts(cfg, n=3)
+    ref, _ = _run(cfg, params, mesh1, prompts, speculative=0)
+    for pts in ({4}, {6}, {4, 5, 6}):
+        got, st = _run(cfg, params, mesh1, prompts, speculative=4,
+                       preempt_at=pts)
+        assert got == ref, pts
+        assert st.preemptions == len(pts)
+
+
+@pytest.mark.slow
+def test_page_exhaustion_denies_spec_but_serves(mesh1):
+    """A pool with zero headroom beyond base demand: speculation is denied
+    at admission (all-or-nothing), requests still run to completion on the
+    one-token path, outputs identical."""
+    cfg = _cfg()
+    params = model.init_params(cfg, PLAN)
+    max_new, psz = 8, 8
+    # equal-length prompts whose base demand (prompt + max_new = 24 tokens)
+    # fills whole pages exactly: after the base alloc the pool is empty, so
+    # the all-or-nothing draft-headroom alloc must fail every admission
+    rng = np.random.RandomState(11)
+    shared = rng.randint(2, cfg.vocab_size, 8).astype(np.int32)
+    prompts = [np.concatenate([
+        shared, np.tile(rng.randint(2, cfg.vocab_size, 4), 2)]
+        ).astype(np.int32) for _ in range(2)]
+    assert all(len(p) == 16 for p in prompts)
+    base = pages_needed(16 + max_new, psz)
+    n_pages = base + 1                    # one slot's base demand + scratch
+    ref, _ = _run(cfg, params, mesh1, prompts, speculative=0, slots=1,
+                  n_pages=n_pages, prefix_cache=False, max_new=max_new)
+    got, st = _run(cfg, params, mesh1, prompts, speculative=4, slots=1,
+                   n_pages=n_pages, prefix_cache=False, max_new=max_new)
+    assert got == ref
+    assert st.spec_denied > 0             # every admission denied headroom
+    assert st.spec_steps == 0             # and no verify tick ever ran

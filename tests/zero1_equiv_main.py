@@ -12,12 +12,11 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import get_config, reduced  # noqa: E402
 from repro.configs.base import ShapeConfig  # noqa: E402
 from repro.core import steps  # noqa: E402
 from repro.core.partition import ShardingPlan  # noqa: E402
-
-from repro import compat  # noqa: E402
 
 
 def main():
