@@ -58,6 +58,40 @@ def rows(smoke: bool = False):
                     "tpu_roofline_us": max(bytes_ / HBM_BW,
                                            flops / PEAK_FLOPS) * 1e6,
                     "arithmetic_intensity": flops / bytes_})
+    # int8 decode attention: same GEMV regime, int8 K/V payloads +
+    # per-(page, slot) f32 scales dequantized in-register — the pool
+    # traffic halves vs bf16, which is the whole point in this
+    # memory-bound regime (the roofline column shows it directly)
+    for S in sz["decode_S"]:
+        B, H, D, psz = 4, 8, 128, 16
+        n_pages = B * (S // psz) + 1
+        q = jnp.asarray(rng.randn(B, H, D), jnp.float32)
+        kq = jnp.asarray(rng.randint(-127, 128, (n_pages, H, psz, D)),
+                         jnp.int8)
+        vq = jnp.asarray(rng.randint(-127, 128, (n_pages, H, psz, D)),
+                         jnp.int8)
+        ks = jnp.asarray(np.abs(rng.randn(n_pages, psz)) * 0.02, jnp.float32)
+        vs = jnp.asarray(np.abs(rng.randn(n_pages, psz)) * 0.02, jnp.float32)
+        bt = jnp.asarray(np.arange(1, n_pages).reshape(B, S // psz),
+                         jnp.int32)
+        ln = jnp.full((B,), S, jnp.int32)
+
+        def deq_gather(pool, sc):
+            g = pool[bt.reshape(-1)].astype(jnp.float32) * \
+                sc[bt.reshape(-1)][:, None, :, None]
+            return g.reshape(B, S // psz, H, psz, D) \
+                .transpose(0, 2, 1, 3, 4).reshape(B, H, S, D)
+
+        f = jax.jit(lambda q, kq, ks, vq, vs, ln: ref.ref_decode_attention(
+            q, deq_gather(kq, ks), deq_gather(vq, vs), ln))
+        t = _time(f, q, kq, ks, vq, vs, ln)
+        bytes_ = 2 * B * H * S * D * 1 + 2 * B * S * 4     # int8 + scales
+        flops = 4 * B * H * S * D
+        out.append({"kernel": "decode_attention_int8", "shape": f"S={S}",
+                    "cpu_us_per_call": t * 1e6,
+                    "tpu_roofline_us": max(bytes_ / HBM_BW,
+                                           flops / PEAK_FLOPS) * 1e6,
+                    "arithmetic_intensity": flops / bytes_})
     # flash attention prefill tile
     for S in sz["flash_S"]:
         H, D = 4, 128

@@ -268,6 +268,84 @@ def run_spec_mode(cfg, plan, mesh, params, sz, k=4):
     return row
 
 
+def _kv_pool_bytes(cfg, plan, n_pages, page_size):
+    """Exact KV/cross pool footprint (payload + scale side tensors) from
+    the cache template — what the engine would allocate, without building
+    one."""
+    from repro.core import kvcache
+    from repro.core.partition import model_layout
+    tmpl = kvcache.paged_cache_template(cfg, plan, model_layout(cfg, plan),
+                                        n_pages, page_size)
+    total = 0
+    for pat in tmpl:
+        for d in pat:
+            for kind in ("kv", "cross"):
+                for shape, dtype, _ in d.get(kind, {}).values():
+                    total += int(np.prod(shape)) * np.dtype(dtype).itemsize
+    return total
+
+
+def run_quant_mode(cfg, plan_fp16, plan_i8, mesh, params, sz):
+    """Quantized-KV scenario: int8 pools + per-page scales vs fp16 pools
+    AT A FIXED POOL BYTE BUDGET.  The budget fits the fp16 pool exactly
+    one request's pages; int8 pages cost ~half the bytes, so the same
+    budget holds ~2x the pages and the engine admits strictly more
+    requests concurrently — the capacity story behind quantizing at all.
+    Reports pool bytes (ratio gated at <= 0.55x), tokens/s, and max
+    concurrently admitted requests per variant.  -> row dict
+    ("quant-int8")."""
+    from repro.core.kvcache import pages_needed
+    from repro.serving import ServingEngine
+
+    need = pages_needed(sz["prefix"] + sz["suffix"] + sz["max_new"],
+                        sz["page_size"])
+    n_pages_fp16 = need + 1                      # budget: one admission
+    budget = _kv_pool_bytes(cfg, plan_fp16, n_pages_fp16, sz["page_size"])
+    per_page_i8 = _kv_pool_bytes(cfg, plan_i8, 2, sz["page_size"]) - \
+        _kv_pool_bytes(cfg, plan_i8, 1, sz["page_size"])
+    n_pages_i8 = budget // per_page_i8
+
+    def drive(plan, n_pages):
+        eng = ServingEngine.build_paged(
+            cfg, plan, mesh, sz["slots"], sz["seq_budget"], params,
+            page_size=sz["page_size"], prefill_chunk=sz["chunk"],
+            n_pages=int(n_pages))
+        reqs = build_requests(sz, cfg.vocab_size, seed=11)
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        tick, max_conc = 0, 0
+        while eng.has_pending() or \
+                any(a is not None for a in eng.admissions):
+            eng.tick()
+            tick += 1
+            max_conc = max(max_conc,
+                           sum(a is not None for a in eng.admissions))
+            assert tick < 50_000, "quant scenario did not converge"
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        return eng, eng.stats, dt, max_conc
+
+    eng16, st16, dt16, conc16 = drive(plan_fp16, n_pages_fp16)
+    eng8, st8, dt8, conc8 = drive(plan_i8, n_pages_i8)
+    row = _stats_row("quant-int8", eng8, st8, dt8, sz["requests"])
+    row["pool_bytes_fp16"] = budget
+    row["pool_bytes_int8"] = _kv_pool_bytes(cfg, plan_i8, n_pages_fp16,
+                                            sz["page_size"])
+    row["bytes_ratio"] = row["pool_bytes_int8"] / budget
+    row["n_pages_fp16"] = n_pages_fp16
+    row["n_pages_int8"] = int(n_pages_i8)
+    row["max_concurrent_fp16"] = conc16
+    row["max_concurrent_int8"] = conc8
+    row["tokens_per_s_fp16"] = st16.decoded_tokens / dt16
+    # the two acceptance bars: int8 pages cost at most 0.55x the fp16
+    # bytes, and the reclaimed budget buys real admission headroom
+    assert row["bytes_ratio"] <= 0.55, \
+        f"int8 pool bytes ratio {row['bytes_ratio']:.3f} > 0.55"
+    assert conc8 > conc16, (conc8, conc16)
+    return row
+
+
 def run_dp_mode(dp, cfg, plan, mesh, params, sz):
     """dp-scaling scenario: two tenant groups, each sharing its own system
     prompt.  With dp=2 the router splits the tenants across replicas by
@@ -372,7 +450,18 @@ def rows(smoke: bool = False):
           f"draft_hit_rate={spec_row['draft_hit_rate']:.2f} "
           f"({spec_row['spec_accepted']}/{spec_row['spec_drafted']} "
           f"draft tokens accepted; outputs identical to one-token engine)")
-    return out + [fcfs_row, pre_row, dp1_row, dp2_row, hybrid_row, spec_row]
+    # quantized pools: int8 vs fp16 at a fixed pool byte budget
+    quant_row = run_quant_mode(
+        cfg, ShardingPlan(tp=1, kv_cache_dtype="bfloat16"),
+        ShardingPlan(tp=1, kv_cache_dtype="int8"), mesh, params, sz)
+    print(f"# quantized KV: int8 pool bytes "
+          f"{quant_row['bytes_ratio']:.3f}x fp16, max concurrent "
+          f"{quant_row['max_concurrent_int8']} vs "
+          f"{quant_row['max_concurrent_fp16']} at the same byte budget "
+          f"({quant_row['n_pages_int8']} vs {quant_row['n_pages_fp16']} "
+          f"pages)")
+    return out + [fcfs_row, pre_row, dp1_row, dp2_row, hybrid_row, spec_row,
+                  quant_row]
 
 
 def main(smoke=False, json_path=None):

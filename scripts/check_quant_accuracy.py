@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Quantized-pool accuracy gate (CI: the ``accuracy-gate`` step).
+
+int8 page pools trade 4x/2x memory for a bounded precision loss; this
+gate pins down "bounded".  For each paged arch family — attention-only
+(int8 self-KV), hybrid (int8 KV + int8 SSM slabs), pure SSM (int8
+slabs), enc-dec (int8 cross-KV) — it runs the paged engine greedy twice
+on the same requests, float pools vs int8 pools, recording the logits
+row behind every emitted token, and requires
+
+  1. **greedy identity** on short horizons: the int8 run emits EXACTLY
+     the float oracle's tokens, and
+  2. **logit drift** below ``DRIFT_BOUND``: max |logits_int8 - logits_fp|
+     over every emitted position, so near-ties that happen not to flip
+     the argmax today cannot be hiding drift that would flip them under
+     any small perturbation tomorrow.
+
+Identity alone is too weak (argmax can mask drift); drift alone is too
+weak (a tiny drift on a near-tie still flips tokens).  Together they say:
+quantization changed nothing a user can see, and not much a user cannot.
+
+    PYTHONPATH=src python scripts/check_quant_accuracy.py
+"""
+import sys
+
+import numpy as np
+
+SEED = 0
+MAX_NEW = 8
+# max |logit drift| allowed per arch family.  Measured drift on these
+# reduced configs is <= 0.005 (see the printed table); the 10x headroom
+# absorbs accumulation differences across BLAS backends without letting
+# a real regression through.
+DRIFT_BOUND = 0.05
+
+
+def _recording_engine_cls():
+    from repro.serving import ServingEngine
+
+    class LogitRecordingEngine(ServingEngine):
+        """Records the logits row behind every emitted token, per rid."""
+
+        def _init_recorder(self):
+            self.recorded = {}
+
+        def _sample_row(self, logits, b, req):
+            self.recorded.setdefault(req.rid, []).append(
+                logits[b].copy())
+            return super()._sample_row(logits, b, req)
+
+    return LogitRecordingEngine
+
+
+def run_family(name, plan_fp, plan_i8, mesh, frames_of=None):
+    from repro.configs import get_config, reduced
+    from repro.core import model
+    from repro.serving import Request
+
+    Eng = _recording_engine_cls()
+    cfg = reduced(get_config(name), dtype="float32")
+    params = model.init_params(cfg, plan_fp, seed=SEED)
+    rng = np.random.RandomState(SEED)
+    frames = frames_of(cfg, rng) if frames_of else None
+
+    def run(plan):
+        eng = Eng.build_paged(cfg, plan, mesh, 2, 64, params,
+                              page_size=8, prefill_chunk=8)
+        eng._init_recorder()
+        reqs = [Request(rid=i,
+                        prompt=rng_p.randint(2, cfg.vocab_size,
+                                             L).astype(np.int32),
+                        max_new_tokens=MAX_NEW,
+                        frames=(frames[i % len(frames)] if frames else None))
+                for i, L in enumerate([13, 9, 17, 6])]
+        for r in reqs:
+            eng.submit(r)
+        eng.run(max_ticks=2000)
+        assert all(r.done for r in reqs), name
+        return ({r.rid: tuple(r.out_tokens) for r in reqs}, eng.recorded)
+
+    rng_p = np.random.RandomState(SEED + 1)
+    fp_toks, fp_logits = run(plan_fp)
+    rng_p = np.random.RandomState(SEED + 1)       # identical prompts
+    i8_toks, i8_logits = run(plan_i8)
+
+    drift = 0.0
+    for rid, rows in fp_logits.items():
+        got = i8_logits.get(rid, [])
+        assert len(got) == len(rows), (name, rid)
+        for a, b in zip(rows, got):
+            drift = max(drift, float(np.abs(a - b).max()))
+    identical = fp_toks == i8_toks
+    status = "ok  " if identical and drift <= DRIFT_BOUND else "FAIL"
+    print(f"{status} {name:24s} greedy_identical={identical} "
+          f"max_logit_drift={drift:.4f} (bound {DRIFT_BOUND})")
+    if not identical:
+        for rid in sorted(fp_toks):
+            if i8_toks.get(rid) != fp_toks[rid]:
+                print(f"  rid {rid}:\n    fp   {fp_toks[rid]}"
+                      f"\n    int8 {i8_toks.get(rid)}")
+    return identical and drift <= DRIFT_BOUND
+
+
+def main():
+    from repro.core.partition import ShardingPlan
+    from repro.launch.mesh import host_mesh
+
+    mesh = host_mesh(tp=1, dp=1)
+    fp = ShardingPlan(tp=1, kv_cache_dtype="float32")
+    i8_kv = ShardingPlan(tp=1, kv_cache_dtype="int8")
+    i8_all = ShardingPlan(tp=1, kv_cache_dtype="int8",
+                          ssm_cache_dtype="int8")
+
+    def enc_frames(cfg, rng):
+        return [rng.randn(cfg.enc_seq_len, cfg.d_model).astype(np.float32)
+                for _ in range(2)]
+
+    ok = True
+    ok &= run_family("tinyllama-42m", fp, i8_kv, mesh)
+    ok &= run_family("hymba-1.5b", fp, i8_all, mesh)
+    ok &= run_family("mamba2-370m", fp, i8_all, mesh)
+    ok &= run_family("seamless-m4t-large-v2", fp, i8_kv, mesh,
+                     frames_of=enc_frames)
+    if not ok:
+        print("accuracy gate FAILED")
+        return 1
+    print("accuracy gate passed: greedy-identical, drift within bound")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

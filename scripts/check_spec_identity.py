@@ -18,6 +18,12 @@ also fails if the speculative runs never accepted a draft token (the gate
 must exercise the verify path, not vacuously pass through the one-token
 fallback).
 
+A second matrix covers the quantized pools: with
+``kv_cache_dtype="int8"`` the greedy short-horizon outputs must stay
+token-identical to the FLOAT oracle — speculative off AND on, across
+dp {1, 2} x {fcfs, priority, fair} — so quantization composes with
+speculation, preemption and dp routing without changing a single token.
+
     PYTHONPATH=src python scripts/check_spec_identity.py
 """
 import functools
@@ -102,6 +108,28 @@ def main():
                     if spec.get(rid) != oracle[rid]:
                         print(f"  rid {rid}:\n    oracle {oracle[rid]}"
                               f"\n    spec   {spec.get(rid)}")
+    # quantized pools: int8 greedy rows vs the fp oracle (spec off and on)
+    plan_i8 = ShardingPlan(tp=1, kv_cache_dtype="int8")
+    for dp in (1, 2):
+        for policy in ("fcfs", "priority", "fair"):
+            oracle, _ = run_engine(cfg, plan, params, mesh, prompts,
+                                   speculative=0, policy=policy,
+                                   temperature=0.0, dp=dp)
+            for spec_k in (0, K):
+                tag = f"kv=int8 dp={dp} policy={policy} spec={spec_k}"
+                got, st = run_engine(cfg, plan_i8, params, mesh, prompts,
+                                     speculative=spec_k, policy=policy,
+                                     temperature=0.0, dp=dp)
+                total_accepted += st.spec_accepted
+                if got == oracle:
+                    print(f"ok   {tag}")
+                    continue
+                failures += 1
+                print(f"FAIL {tag}: token divergence vs fp oracle")
+                for rid in sorted(oracle):
+                    if got.get(rid) != oracle[rid]:
+                        print(f"  rid {rid}:\n    oracle {oracle[rid]}"
+                              f"\n    int8   {got.get(rid)}")
     if total_accepted == 0:
         print("FAIL: no draft token was ever accepted — the verify path "
               "was not exercised")

@@ -198,26 +198,52 @@ def gather_pages(pool, block_table):
     return g.transpose(0, 2, 1, 3, 4).reshape(B, G, n_max * psz, D)
 
 
+def gather_pages_dequant(pool, scales, block_table, dtype):
+    """``gather_pages`` for an int8 pool with per-(page, slot) scales.
+
+    pool: (n_pages, G, psz, D) int8; scales: (n_pages, psz) float32 —
+    one scale per token row, written atomically with the payload by
+    ``blocks._page_write`` / the cross-KV write step.
+    -> (B, G, n_max * psz, D) in ``dtype``.
+    """
+    B, n_max = block_table.shape
+    psz = pool.shape[2]
+    g = gather_pages(pool, block_table).astype(jnp.float32)
+    s = jnp.take(scales, block_table.reshape(-1), axis=0)    # (B*n_max, psz)
+    s = s.reshape(B, 1, n_max * psz, 1)
+    return (g * s).astype(dtype)
+
+
 def paged_decode_attention(q, k_pool, v_pool, block_table, cur_pos, *,
-                           window=0, softcap=0.0, scale=None):
+                           window=0, softcap=0.0, scale=None,
+                           k_scale=None, v_scale=None):
     """Decode attention reading K/V through a block table.
 
     q: (B, G, R, D); pools: (n_pages, G, psz, D); block_table: (B, n_max);
     cur_pos: (B,) absolute position of the current token.  Slot s of the
     gathered stream holds absolute position s by construction, so validity
     is simply s <= cur_pos (plus the sliding window).
+
+    ``k_scale``/``v_scale`` ((n_pages, psz) float32): int8 pools are
+    dequantized through their per-row scales before scoring.
     """
     B = q.shape[0]
     L = block_table.shape[1] * k_pool.shape[2]
     kv_pos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
-    return decode_attention(q, gather_pages(k_pool, block_table),
-                            gather_pages(v_pool, block_table), kv_pos,
+    if k_scale is not None:
+        kf = gather_pages_dequant(k_pool, k_scale, block_table, q.dtype)
+        vf = gather_pages_dequant(v_pool, v_scale, block_table, q.dtype)
+    else:
+        kf = gather_pages(k_pool, block_table)
+        vf = gather_pages(v_pool, block_table)
+    return decode_attention(q, kf, vf, kv_pos,
                             cur_pos, window=window, softcap=softcap,
                             scale=scale, tag="attn/paged_decode")
 
 
 def paged_verify_attention(q, k_pool, v_pool, block_table, cur_pos, *,
-                           window=0, softcap=0.0, scale=None):
+                           window=0, softcap=0.0, scale=None,
+                           k_scale=None, v_scale=None):
     """Q-query decode attention for speculative verify.
 
     q: (B, G, R, Q, D) — per slot, query i sits at absolute position
@@ -235,8 +261,12 @@ def paged_verify_attention(q, k_pool, v_pool, block_table, cur_pos, *,
     B, G, R, Q, D = q.shape
     scale = scale if scale is not None else D ** -0.5
     L = block_table.shape[1] * k_pool.shape[2]
-    kf = gather_pages(k_pool, block_table)
-    vf = gather_pages(v_pool, block_table)
+    if k_scale is not None:
+        kf = gather_pages_dequant(k_pool, k_scale, block_table, q.dtype)
+        vf = gather_pages_dequant(v_pool, v_scale, block_table, q.dtype)
+    else:
+        kf = gather_pages(k_pool, block_table)
+        vf = gather_pages(v_pool, block_table)
     s = jnp.einsum("bgrqd,bgsd->bgrqs", q, kf,
                    preferred_element_type=jnp.float32) * scale
     if softcap:

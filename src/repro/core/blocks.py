@@ -19,7 +19,8 @@ from repro.configs.base import FFN_MOE, FFN_NONE, MIX_ATTN, MIX_SSM
 from repro.core import collectives as cc
 from repro.core import ssm as ssd
 from repro.core.attention import decode_attention, flash_attention, \
-    gather_pages, paged_decode_attention, paged_verify_attention
+    gather_pages, gather_pages_dequant, paged_decode_attention, \
+    paged_verify_attention
 from repro.core.layers import activation, apply_norm, apply_rope, rmsnorm, \
     rmsnorm_from_sumsq
 from repro.core.moe import moe_ffn_ep, moe_ffn_tp
@@ -50,6 +51,24 @@ def _kv_dq(x, compute_dtype):
         return (x.astype(jnp.float32) * (1.0 / KVQ["scale"])
                 ).astype(compute_dtype)
     return x.astype(compute_dtype)
+
+
+def _row_quant(x):
+    """Per-token-row int8 quantization for the paged pools.
+
+    x: (..., G, D) — one token row per leading index.  Each row gets its
+    own scale ``amax / 127`` over its (G, D) values, so the stored bytes
+    are a pure function of the row's value: write order, speculation
+    rollbacks and preemption/resume chunking cannot change them (the
+    schedule-invariance the identity gates rely on).  A zero row gets
+    scale 0 and dequantizes to exact zeros.  -> (int8 like x, scale
+    (...,) float32)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    inv = jnp.where(amax > 0, 127.0 / jnp.maximum(amax, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(xf * inv[..., None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, amax * (1.0 / 127.0)
 
 
 def shard_index(axis="model"):
@@ -171,10 +190,16 @@ def cross_attn_mixer(xn, pa, cfg, plan, lay, mode, cross_cache, enc_memory,
     if cross_cache is not None and "ckp" in cross_cache:   # paged, read-only
         cbt = pages["cross_block_table"]
         S_enc = cfg.enc_seq_len
-        kg = gather_pages(_kv_dq(cross_cache["ckp"], qg.dtype),
-                          cbt)[:, :, :S_enc]
-        vg = gather_pages(_kv_dq(cross_cache["cvp"], qg.dtype),
-                          cbt)[:, :, :S_enc]
+        if "cksp" in cross_cache:                          # int8 + scales
+            kg = gather_pages_dequant(cross_cache["ckp"], cross_cache["cksp"],
+                                      cbt, qg.dtype)[:, :, :S_enc]
+            vg = gather_pages_dequant(cross_cache["cvp"], cross_cache["cvsp"],
+                                      cbt, qg.dtype)[:, :, :S_enc]
+        else:
+            kg = gather_pages(_kv_dq(cross_cache["ckp"], qg.dtype),
+                              cbt)[:, :, :S_enc]
+            vg = gather_pages(_kv_dq(cross_cache["cvp"], qg.dtype),
+                              cbt)[:, :, :S_enc]
         if mode == "decode":
             out = decode_attention(
                 qg[:, :, :, 0], kg, vg,
@@ -254,12 +279,18 @@ def _paged_attn(qg, kg, vg, kv, pages, mode, positions, pos, window, cfg):
     """
     bt = pages["block_table"]
     psz = kv["kp"].shape[2]
+    quant = "ksp" in kv
     if mode == "decode":
         new = _page_write(kv, kg, vg, pos[:, None], bt, psz)
-        out = paged_decode_attention(
-            qg[:, :, :, 0], _kv_dq(new["kp"], qg.dtype),
-            _kv_dq(new["vp"], qg.dtype), bt, pos, window=window,
-            scale=cfg.attn_scale)
+        if quant:
+            out = paged_decode_attention(
+                qg[:, :, :, 0], new["kp"], new["vp"], bt, pos, window=window,
+                scale=cfg.attn_scale, k_scale=new["ksp"], v_scale=new["vsp"])
+        else:
+            out = paged_decode_attention(
+                qg[:, :, :, 0], _kv_dq(new["kp"], qg.dtype),
+                _kv_dq(new["vp"], qg.dtype), bt, pos, window=window,
+                scale=cfg.attn_scale)
         return out[:, :, :, None, :], new
     if mode == "verify":
         # speculative verify: token i of the block sits at position
@@ -270,14 +301,23 @@ def _paged_attn(qg, kg, vg, kv, pages, mode, positions, pos, window, cfg):
         # and rollback are host-side pos bookkeeping (rejected KV is
         # masked by validity until the next step overwrites it)
         new = _page_write(kv, kg, vg, positions, bt, psz)
-        out = paged_verify_attention(
-            qg, _kv_dq(new["kp"], qg.dtype), _kv_dq(new["vp"], qg.dtype),
-            bt, pos, window=window, scale=cfg.attn_scale)
+        if quant:
+            out = paged_verify_attention(
+                qg, new["kp"], new["vp"], bt, pos, window=window,
+                scale=cfg.attn_scale, k_scale=new["ksp"], v_scale=new["vsp"])
+        else:
+            out = paged_verify_attention(
+                qg, _kv_dq(new["kp"], qg.dtype), _kv_dq(new["vp"], qg.dtype),
+                bt, pos, window=window, scale=cfg.attn_scale)
         return out, new
     # prefill chunk: write the chunk, then attend to the gathered prefix
     new = _page_write(kv, kg, vg, positions, bt, psz)
-    k_all = gather_pages(_kv_dq(new["kp"], qg.dtype), bt)     # (B,G,L,D)
-    v_all = gather_pages(_kv_dq(new["vp"], qg.dtype), bt)
+    if quant:
+        k_all = gather_pages_dequant(new["kp"], new["ksp"], bt, qg.dtype)
+        v_all = gather_pages_dequant(new["vp"], new["vsp"], bt, qg.dtype)
+    else:
+        k_all = gather_pages(_kv_dq(new["kp"], qg.dtype), bt)  # (B,G,L,D)
+        v_all = gather_pages(_kv_dq(new["vp"], qg.dtype), bt)
     out = flash_attention(qg, k_all, v_all, causal=True, window=window,
                           scale=cfg.attn_scale, q_offset=positions[0, 0])
     return out, new
@@ -287,15 +327,31 @@ def _page_write(kv, kg, vg, positions, bt, psz):
     """Scatter new K/V into the page pool.  kg/vg: (B, G, C, D);
     positions: (B, C) absolute token positions (C = 1 for decode).
     Negative positions (padded verify queries) route to the scratch page
-    (page 0), whose contents are never read by a live slot."""
+    (page 0), whose contents are never read by a live slot.
+
+    Quantized pools (``ksp``/``vsp`` present): each token row is quantized
+    independently with its own per-row scale (``_row_quant``), and the
+    scale is scattered atomically with the payload into the per-(page,
+    slot) scale tensor."""
     B, G, C, D = kg.shape
     safe = jnp.maximum(positions, 0)
     pid = jnp.take_along_axis(bt, safe // psz, axis=1)         # (B, C)
     pid = jnp.where(positions >= 0, pid, 0)
     off = safe % psz
+    flat_pid, flat_off = pid.reshape(-1), off.reshape(-1)
+    if "ksp" in kv:
+        kq, ks = _row_quant(kg.transpose(0, 2, 1, 3))          # (B,C,G,D)
+        vq, vs = _row_quant(vg.transpose(0, 2, 1, 3))
+        return {
+            "kp": kv["kp"].at[flat_pid, :, flat_off].set(
+                kq.reshape(B * C, G, D)),
+            "vp": kv["vp"].at[flat_pid, :, flat_off].set(
+                vq.reshape(B * C, G, D)),
+            "ksp": kv["ksp"].at[flat_pid, flat_off].set(ks.reshape(B * C)),
+            "vsp": kv["vsp"].at[flat_pid, flat_off].set(vs.reshape(B * C)),
+        }
     kq = _kv_q(kg, kv["kp"].dtype).transpose(0, 2, 1, 3)       # (B,C,G,D)
     vq = _kv_q(vg, kv["vp"].dtype).transpose(0, 2, 1, 3)
-    flat_pid, flat_off = pid.reshape(-1), off.reshape(-1)
     return {
         "kp": kv["kp"].at[flat_pid, :, flat_off].set(kq.reshape(B * C, G, D)),
         "vp": kv["vp"].at[flat_pid, :, flat_off].set(vq.reshape(B * C, G, D)),
@@ -485,15 +541,31 @@ def _paged_ssm(xn, ps, cfg, plan, lay, mode, slab_pool, pages):
     at the reserved scratch slab (id 0), so full-batch decode never
     corrupts a live slab."""
     sid = pages["slab_ids"]
-    view = {"state": slab_pool["statep"][sid],
+    quant = "sscalep" in slab_pool
+    if quant:
+        # int8 slabs: dequant through the per-(slab, head) scale on gather,
+        # re-quantize the whole slab on scatter (full-overwrite semantics,
+        # so the stored bytes depend only on the new state's value)
+        state = (slab_pool["statep"][sid].astype(jnp.float32) *
+                 slab_pool["sscalep"][sid][:, :, None, None])
+    else:
+        state = slab_pool["statep"][sid]
+    view = {"state": state,
             "conv_x": slab_pool["conv_xp"][sid],
             "conv_B": slab_pool["conv_Bp"][sid],
             "conv_C": slab_pool["conv_Cp"][sid]}
     out, new = ssm_mixer(xn, ps, cfg, plan, lay, mode, view,
                          chunk_last_idx=(pages.get("last_idx")
                                          if mode != "decode" else None))
-    return out, {k + "p": slab_pool[k + "p"].at[sid].set(
-        v.astype(slab_pool[k + "p"].dtype)) for k, v in new.items()}
+    pools = {k + "p": slab_pool[k + "p"].at[sid].set(
+        v.astype(slab_pool[k + "p"].dtype))
+        for k, v in new.items() if not (quant and k == "state")}
+    if quant:
+        q, s = _row_quant(new["state"])                  # (B,H,P,N), (B,H)
+        pools["statep"] = slab_pool["statep"].at[sid].set(q)
+        pools["sscalep"] = slab_pool["sscalep"].at[sid].set(
+            s.astype(slab_pool["sscalep"].dtype))
+    return out, pools
 
 
 # ---------------------------------------------------------------------------

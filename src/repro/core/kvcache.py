@@ -174,6 +174,19 @@ SCRATCH_PAGE = 0
 SCRATCH_SLAB = 0
 
 
+def kv_pool_is_quantized(plan) -> bool:
+    """True when the paged self-KV / cross-KV pools store int8 payloads with
+    per-(page, slot) float scales (``plan.kv_cache_dtype == "int8"``)."""
+    return jnp.dtype(plan.kv_cache_dtype) == jnp.int8
+
+
+def ssm_pool_is_quantized(plan) -> bool:
+    """True when the SSM state slabs store int8 payloads with per-(slab,
+    head) float scales (``plan.ssm_cache_dtype == "int8"``)."""
+    return bool(plan.ssm_cache_dtype) and \
+        jnp.dtype(plan.ssm_cache_dtype) == jnp.int8
+
+
 def cache_profile(cfg) -> set:
     """Union of decode-cache kinds across the decoder stack:
     subset of {"kv", "ssm", "cross_kv"}."""
@@ -215,25 +228,42 @@ def paged_cache_template(cfg, plan, lay, n_pages: int, page_size: int,
 
     ``n_replicas`` adds a leading replica dim sharded over ``plan.dp_axes``
     — each data shard stores only its replicas' pages/slabs (dp>1
-    serving)."""
+    serving).
+
+    **Quantized pools** (``plan.kv_cache_dtype == "int8"`` /
+    ``plan.ssm_cache_dtype == "int8"``): payloads store int8 and each pool
+    gains a small float32 scale side tensor — ``ksp``/``vsp`` (and
+    ``cksp``/``cvsp`` for cross) of shape (n_replicas, n_pages, page_size),
+    one scale per (page, token slot) so every token row is quantized
+    independently of write order (schedule/speculation/preemption
+    invariance by construction); ``sscalep`` of shape (n_replicas,
+    n_slabs, tp*H), one scale per (slab, head), re-written wholesale on
+    every state scatter.  A zero scale dequantizes to exact zeros, so
+    ``zero_paged_cache`` leaves the quantized pools indistinguishable
+    from zeroed fp pools.  Float dtypes produce the exact pre-quantization
+    templates — no scale leaves exist."""
     ok, why = paged_cache_supported(cfg)
     if not ok:
         raise ValueError(f"paged cache unsupported for {cfg.name}: {why}")
     assert n_replicas >= 1, n_replicas
     kvd = jnp.dtype(plan.kv_cache_dtype)
+    kv_quant = kv_pool_is_quantized(plan)
     d = cfg.head_dim_
     tpax = "model" if plan.tp > 1 else None
     dpax = tuple(plan.dp_axes)
     pool = ((n_replicas, n_pages, plan.tp * lay.attn.n_kv_loc, page_size, d),
             kvd, P(dpax, None, tpax, None, None))
+    scale = ((n_replicas, n_pages, page_size), jnp.float32,
+             P(dpax, None, None))
     slab = None
     if "ssm" in cache_profile(cfg):
         assert n_slabs > 1, f"ssm layers need n_slabs > 1, got {n_slabs}"
         H, Pdim, N = lay.ssm.hq_loc, cfg.ssm_head_dim, cfg.ssm_state
         K = cfg.ssm_conv
+        sd = jnp.int8 if ssm_pool_is_quantized(plan) else jnp.float32
         slab = {
             "statep": ((n_replicas, n_slabs, plan.tp * H, Pdim, N),
-                       jnp.float32, P(dpax, None, tpax, None, None)),
+                       sd, P(dpax, None, tpax, None, None)),
             "conv_xp": ((n_replicas, n_slabs, K - 1, plan.tp * H * Pdim),
                         jnp.dtype(cfg.dtype), P(dpax, None, None, tpax)),
             "conv_Bp": ((n_replicas, n_slabs, K - 1, N), jnp.dtype(cfg.dtype),
@@ -241,6 +271,9 @@ def paged_cache_template(cfg, plan, lay, n_pages: int, page_size: int,
             "conv_Cp": ((n_replicas, n_slabs, K - 1, N), jnp.dtype(cfg.dtype),
                         P(dpax, None, None, None)),
         }
+        if sd == jnp.int8:
+            slab["sscalep"] = ((n_replicas, n_slabs, plan.tp * H),
+                               jnp.float32, P(dpax, None, tpax))
     tmpl = []
     for g in cfg.layer_groups():
         per_pattern = []
@@ -249,10 +282,16 @@ def paged_cache_template(cfg, plan, lay, n_pages: int, page_size: int,
             t = {}
             if "kv" in kinds:
                 t["kv"] = {"kp": pool, "vp": pool}
+                if kv_quant:
+                    t["kv"]["ksp"] = scale
+                    t["kv"]["vsp"] = scale
             if "ssm" in kinds:
                 t["ssm"] = dict(slab)
             if "cross_kv" in kinds:
                 t["cross"] = {"ckp": pool, "cvp": pool}
+                if kv_quant:
+                    t["cross"]["cksp"] = scale
+                    t["cross"]["cvsp"] = scale
             per_pattern.append(_stack_template(t, g.n_reps))
         tmpl.append(per_pattern)
     return tmpl
@@ -297,7 +336,14 @@ class PageAllocator:
     last ref drops (``decref``; ``free`` is a synonym for the sole-owner
     case).  Shared pages are immutable by convention — a slot that must
     append into one first takes a private copy (copy-on-write; see
-    ``serving.prefix_cache``)."""
+    ``serving.prefix_cache``).
+
+    Quantized pools additionally track **scale-dirty** pages: every page
+    whose last ref drops (via ``decref`` — ``free`` and the speculative
+    ``trim`` both funnel through it) is marked so the engine can zero its
+    per-slot scale rows before the page is recycled, guaranteeing a
+    recycled page never pairs stale scales with fresh payloads
+    (``take_scale_dirty``)."""
 
     def __init__(self, n_pages: int, n_reserved: int = 1):
         assert n_pages > n_reserved, (n_pages, n_reserved)
@@ -306,6 +352,7 @@ class PageAllocator:
         self._free = list(range(n_pages - 1, n_reserved - 1, -1))
         self._free_set = set(self._free)     # O(1) double-free detection
         self._rc = [0] * n_pages
+        self._scale_dirty: set = set()       # freed pages w/ stale scale rows
         self.total_allocated = 0             # pages ever handed out (stats)
 
     @property
@@ -342,6 +389,7 @@ class PageAllocator:
             if self._rc[p] == 0:
                 self._free.append(p)
                 self._free_set.add(p)
+                self._scale_dirty.add(p)
 
     def free(self, pages):
         """Release sole-owner pages.  Errors on a shared page: silently
@@ -364,6 +412,18 @@ class PageAllocator:
         reference and the page returns to the pool only when its last
         sharer lets go."""
         self.decref(pages)
+
+    def take_scale_dirty(self) -> list:
+        """Drain the pages needing a scale reset before reuse: every page
+        freed (last ref dropped) since the previous drain that is still on
+        the free list.  A dirty page meanwhile re-allocated stays marked —
+        resetting it mid-flight would corrupt the new occupant, and its
+        stale rows are benign until it is freed again (per-slot scales are
+        rewritten atomically with every payload write, and un-rewritten
+        slots sit beyond the occupant's length mask)."""
+        out = sorted(self._scale_dirty & self._free_set)
+        self._scale_dirty.difference_update(out)
+        return out
 
 
 class SlabAllocator:

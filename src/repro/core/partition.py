@@ -46,8 +46,12 @@ class ShardingPlan:
     moe_mode: str = "tp"              # tp (paper-faithful F-slice) | ep (all_to_all)
     moe_capacity: float = 1.25        # per-DP-shard expert capacity factor
     remat: str = "none"               # none | block (training)
-    kv_cache_dtype: str = "bfloat16"
+    kv_cache_dtype: str = "bfloat16"  # "int8": quantized page pools with
+                                      #   per-(page, slot) scales (paged) /
+                                      #   fixed-point lanes (contiguous)
     kv_quant_scale: float = 16.0      # fixed-point scale for int8 KV
+    ssm_cache_dtype: str = ""         # "" -> float32 slabs; "int8": quantized
+                                      #   state slabs with per-slab-head scales
     weight_dtype: str = ""            # "" -> cfg.dtype; "int8" for deployment
     attn_scheme: str = "scan"         # scan (baseline) | split (4/3 causal)
     cp_axes: tuple = ()               # context parallelism: shard S over these

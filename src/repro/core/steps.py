@@ -792,6 +792,21 @@ def make_cross_kv_write_step(cfg, plan, mesh, n_pages: int, page_size: int,
         val = _kv_q(kv1, pool.dtype).transpose(2, 0, 1, 3)  # (S_enc,reps,G,D)
         return pool.at[:, pids, :, offs].set(val)
 
+    def scatter_q(pool, sc, kv1, bt_row, off):
+        """int8 pools: per-token-row quantization, scale scattered into the
+        (reps, R_loc*n_pages, psz) side tensor atomically with the payload
+        (same row scheme as ``blocks._row_quant``)."""
+        pids = jnp.take(bt_row, jnp.arange(S_enc) // page_size) + off
+        offs = jnp.arange(S_enc) % page_size
+        kf = kv1.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(kf), axis=(1, 3))            # (reps, S_enc)
+        inv = jnp.where(amax > 0, 127.0 / jnp.maximum(amax, 1e-30), 0.0)
+        q = jnp.clip(jnp.round(kf * inv[:, None, :, None]),
+                     -127, 127).astype(jnp.int8)
+        val = q.transpose(2, 0, 1, 3)                       # (S_enc,reps,G,D)
+        return (pool.at[:, pids, :, offs].set(val),
+                sc.at[:, pids, offs].set(amax * (1.0 / 127.0)))
+
     def per_shard(params, cache, frames, cross_bt):
         folded = kvcache.fold_replica_pools(cache)
         for i in range(r_loc):
@@ -804,10 +819,20 @@ def make_cross_kv_write_step(cfg, plan, mesh, n_pages: int, page_size: int,
                     if kv is None:
                         continue
                     cr = folded[gi][pi]["cross"]
-                    cr = {"ckp": scatter(cr["ckp"], kv["k"][:, 0],
-                                         cross_bt[i], i * n_pages),
-                          "cvp": scatter(cr["cvp"], kv["v"][:, 0],
-                                         cross_bt[i], i * n_pages)}
+                    if "cksp" in cr:
+                        ckp, cksp = scatter_q(cr["ckp"], cr["cksp"],
+                                              kv["k"][:, 0], cross_bt[i],
+                                              i * n_pages)
+                        cvp, cvsp = scatter_q(cr["cvp"], cr["cvsp"],
+                                              kv["v"][:, 0], cross_bt[i],
+                                              i * n_pages)
+                        cr = {"ckp": ckp, "cvp": cvp,
+                              "cksp": cksp, "cvsp": cvsp}
+                    else:
+                        cr = {"ckp": scatter(cr["ckp"], kv["k"][:, 0],
+                                             cross_bt[i], i * n_pages),
+                              "cvp": scatter(cr["cvp"], kv["v"][:, 0],
+                                             cross_bt[i], i * n_pages)}
                     folded[gi][pi] = dict(folded[gi][pi], cross=cr)
         return kvcache.unfold_replica_pools(folded, r_loc)
 

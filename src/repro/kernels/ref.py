@@ -71,6 +71,21 @@ def ref_verify_attention(q, k, v, length, scale=None):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def ref_dequant_pool(pool, scales):
+    """Dequantize an int8 page pool through its per-(page, slot) scales.
+
+    pool: (n_pages, H, psz, D) int8; scales: (n_pages, psz) float32
+    -> (n_pages, H, psz, D) float32.  The oracle counterpart of the
+    dequant-on-read step inside the int8 paged kernels.
+    """
+    return pool.astype(jnp.float32) * scales[:, None, :, None]
+
+
+def ref_dequant_state(state, scales):
+    """Dequantize an int8 SSD state slab: (H, P, N) int8 x (H,) float32."""
+    return state.astype(jnp.float32) * scales[:, None, None]
+
+
 def ref_ssd_scan(x, dt, B, C, A, state0=None):
     """Sequential SSD reference.  x: (S, H, P), dt: (S, H), B/C: (S, N),
     A: (H,) negative.  Returns (y (S,H,P), final_state (H,P,N))."""

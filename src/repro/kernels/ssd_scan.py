@@ -27,6 +27,10 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, st_ref, *,
     def _init():
         st_ref[...] = jnp.zeros_like(st_ref)
 
+    _ssd_body(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, st_ref)
+
+
+def _ssd_body(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, st_ref):
     x = x_ref[...].astype(jnp.float32)          # (Q, H, P)
     dt = dt_ref[...].astype(jnp.float32)        # (Q, H)
     B = b_ref[...].astype(jnp.float32)          # (Q, N)
@@ -60,29 +64,61 @@ def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, st_ref, *,
     y_ref[...] = y.astype(y_ref.dtype)
 
 
+def _ssd_kernel_i8(x_ref, dt_ref, b_ref, c_ref, a_ref, s0_ref, s0s_ref,
+                   y_ref, st_ref, *, nc: int):
+    """Variant seeded from an int8 state slab: the initial state is
+    dequantized in-register through its per-head scale — the slab's HBM
+    traffic stays at one byte per element (the quantized-pool serving
+    path's state restore)."""
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_ref[...] = (s0_ref[...].astype(jnp.float32) *
+                       s0s_ref[...][:, None, None])
+
+    _ssd_body(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, st_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, B, C, A, *, chunk=128, interpret=False):
+def ssd_scan(x, dt, B, C, A, *, chunk=128, interpret=False,
+             state0=None, state0_scale=None):
     """x: (S, H, P); dt: (S, H); B/C: (S, N); A: (H,) -> y (S, H, P).
 
     (The D*x skip term and gating are applied by the caller; S % chunk == 0
     is required — pad upstream.)
+
+    ``state0``/``state0_scale`` ((H, P, N) int8 + (H,) float32): seed the
+    scan from a quantized state slab, dequantized in-register at init.
     """
     S, H, P = x.shape
     N = B.shape[-1]
     assert S % chunk == 0, (S, chunk)
     nc = S // chunk
-    return pl.pallas_call(
-        functools.partial(_ssd_kernel, nc=nc),
-        grid=(nc,),
-        in_specs=[
-            pl.BlockSpec((chunk, H, P), lambda c: (c, 0, 0)),
-            pl.BlockSpec((chunk, H), lambda c: (c, 0)),
-            pl.BlockSpec((chunk, N), lambda c: (c, 0)),
-            pl.BlockSpec((chunk, N), lambda c: (c, 0)),
+    in_specs = [
+        pl.BlockSpec((chunk, H, P), lambda c: (c, 0, 0)),
+        pl.BlockSpec((chunk, H), lambda c: (c, 0)),
+        pl.BlockSpec((chunk, N), lambda c: (c, 0)),
+        pl.BlockSpec((chunk, N), lambda c: (c, 0)),
+        pl.BlockSpec((H,), lambda c: (0,)),
+    ]
+    inputs = (x, dt, B, C, A)
+    if state0 is not None:
+        assert state0.dtype == jnp.int8, state0.dtype
+        in_specs += [
+            pl.BlockSpec((H, P, N), lambda c: (0, 0, 0)),
             pl.BlockSpec((H,), lambda c: (0,)),
-        ],
+        ]
+        inputs += (state0, state0_scale)
+        kernel = functools.partial(_ssd_kernel_i8, nc=nc)
+    else:
+        kernel = functools.partial(_ssd_kernel, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((chunk, H, P), lambda c: (c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((S, H, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
         interpret=interpret,
-    )(x, dt, B, C, A)
+    )(*inputs)

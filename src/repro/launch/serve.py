@@ -72,6 +72,12 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--paged", action="store_true",
                     help="paged KV-cache + chunked prefill (README §Serving)")
+    ap.add_argument("--kv-dtype", choices=("fp32", "fp16", "int8"),
+                    default="fp16",
+                    help="paged-pool storage dtype; int8 quantizes every "
+                         "state pool (self-KV, cross-KV, SSM slabs) with "
+                         "per-page scales at ~half the fp16 bytes "
+                         "(README §Quantized KV cache)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--n-pages", type=int, default=0,
@@ -127,7 +133,10 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
-    plan = ShardingPlan(tp=args.tp)
+    kvd = {"fp32": "float32", "fp16": "bfloat16", "int8": "int8"}
+    plan = ShardingPlan(tp=args.tp, kv_cache_dtype=kvd[args.kv_dtype],
+                        ssm_cache_dtype=("int8" if args.kv_dtype == "int8"
+                                         else ""))
     # shard replicas over real devices when they exist; otherwise they
     # co-locate on one data shard (n_replicas must cover the mesh evenly)
     mesh_dp = max((d for d in range(1, args.dp + 1)

@@ -108,7 +108,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kvcache import (SCRATCH_PAGE, SCRATCH_SLAB, PageAllocator,
-                                SlabAllocator, cache_profile, pages_needed)
+                                SlabAllocator, cache_profile,
+                                kv_pool_is_quantized, pages_needed)
 from repro.serving.prefix_cache import (CrossKVCache, PromptLookupDraft,
                                         RadixPrefixCache)
 from repro.serving.router import Router
@@ -249,6 +250,10 @@ class ServingEngine:
         prof = cache_profile(cfg)
         self.has_ssm = paged and "ssm" in prof
         self.has_cross = paged and "cross_kv" in prof
+        # int8 page pools carry per-(page, slot) scale tensors whose rows
+        # must be invalidated when a page is recycled (see _admit_paged)
+        self.quant_pools = paged and kv_pool_is_quantized(plan) and \
+            ("kv" in prof or "cross_kv" in prof)
         if paged:
             from repro.core.kvcache import paged_cache_supported
             ok, why = paged_cache_supported(cfg)
@@ -483,6 +488,25 @@ class ServingEngine:
         self.cache = [[{k: (jax.tree_util.tree_map(upd, v) if k == kind
                             else v) for k, v in d.items()}
                        for d in pat] for pat in self.cache]
+
+    def _reset_scale_rows(self, r: int, pids):
+        """Zero the per-(page, slot) scale rows of recycled pages in
+        replica ``r`` — scale 0 dequantizes to exact zeros, so a recycled
+        page can never pair a fresh payload with a stale scale (each write
+        re-sets payload + scale atomically, but rows past a new occupant's
+        length would otherwise keep the previous owner's scales)."""
+        idx = jnp.asarray(np.asarray(pids, np.int32))
+
+        def upd(kind):
+            self.cache = [[{k: ({kk: (vv.at[:, r, idx].set(0.0)
+                                      if kk.endswith("sp") else vv)
+                                 for kk, vv in v.items()}
+                                if k == kind and isinstance(v, dict) else v)
+                            for k, v in d.items()}
+                           for d in pat] for pat in self.cache]
+
+        upd("kv")
+        upd("cross")
 
     def _zero_slab(self, r: int, slab: int):
         """Fresh requests start from zero recurrent state; the previous
@@ -774,6 +798,10 @@ class ServingEngine:
                         self.stats.prefill_tokens_skipped += stash["n"]
                     else:
                         self._zero_slab(r, adm.slab)
+            if self.quant_pools:
+                dirty = self.allocators[r].take_scale_dirty()
+                if dirty:
+                    self._reset_scale_rows(r, dirty)
         for round_ in cross_rounds:
             frames = np.zeros((self.R, self.cfg.enc_seq_len,
                                self.cfg.d_model), np.float32)

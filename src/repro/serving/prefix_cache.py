@@ -11,6 +11,13 @@ Two caches live here, both holding refcounted page runs in the replica's
   the admission-time write, so there is no copy-on-write and no radix
   structure — frames either match exactly or not at all.
 
+Both caches deal purely in page *ids*, so quantized pools need nothing
+extra here: a page's int8 payload and its per-(page, slot) scale rows
+are indexed by the same id, and sharing, COW duplication and eviction
+move/retire them together (the engine's page-copy step copies scale
+rows alongside payloads; the allocator marks freed pages' scale rows
+for reset before reuse).
+
 Radix prefix cache: token-id sequences -> refcounted page runs.
 
 The serving-layer analogue of the paper's stationary-state discipline:

@@ -237,9 +237,9 @@ def _mixed_requests(cfg, n=10, seed=0, shared_prefix=0):
 
 
 def _run_engine(cfg, params, mesh1, dp, reqs, scheduler=None,
-                prefix_cache=True, max_ticks=5000):
+                prefix_cache=True, max_ticks=5000, plan=PLAN):
     from repro.serving import ServingEngine
-    eng = ServingEngine.build_paged(cfg, PLAN, mesh1, 2, 64, params,
+    eng = ServingEngine.build_paged(cfg, plan, mesh1, 2, 64, params,
                                     page_size=8, prefill_chunk=16,
                                     prefix_cache=prefix_cache,
                                     scheduler=scheduler, dp=dp)
@@ -360,3 +360,98 @@ def test_n_replicas_must_cover_data_extent():
     with pytest.raises(AssertionError, match="multiple"):
         _steps.n_replicas_local(_FakeMesh(), PLAN, 3)
     assert _steps.n_replicas_local(_FakeMesh(), PLAN, 4) == 2
+
+
+# ---------------------------------------------------------------------------
+# quantized pools: dp equivalence and scale-tensor hygiene
+# ---------------------------------------------------------------------------
+
+PLAN_I8 = ShardingPlan(tp=1, kv_cache_dtype="int8")
+
+
+def _assert_scale_hygiene(eng):
+    """Every free page either awaits its scale reset (``_scale_dirty``) or
+    its device scale rows are exactly zero — a recycled page can never pair
+    stale scales with fresh payloads."""
+    for rr in range(eng.R):
+        a = eng.allocators[rr]
+        clean = sorted(a._free_set - a._scale_dirty)
+        if not clean:
+            continue
+        idx = np.asarray(clean, np.int32)
+        for pat in eng.cache:
+            for d in pat:
+                for kind in ("kv", "cross"):
+                    leaves = d.get(kind)
+                    if not isinstance(leaves, dict):
+                        continue
+                    for kk, vv in leaves.items():
+                        if kk.endswith("sp"):
+                            rows = np.asarray(vv[:, rr, idx])
+                            assert not rows.any(), (rr, kk, clean)
+
+
+@pytest.mark.slow
+def test_dp2_int8_greedy_token_identical_to_fp_oracle(mesh1):
+    """int8 pools under dp: per-row quantization is value-deterministic,
+    so routing/interleaving differences between dp=1 and dp=2 cannot
+    change any page's bytes — greedy outputs match the fp dp=1 oracle."""
+    cfg = reduced(get_config("tinyllama-42m"), dtype="float32")
+    params = model.init_params(cfg, PLAN)
+    ref = _mixed_requests(cfg)
+    _run_engine(cfg, params, mesh1, 1, ref)
+    assert all(r.done for r in ref)
+    want = {r.rid: tuple(r.out_tokens) for r in ref}
+
+    got1 = _mixed_requests(cfg)
+    eng1 = _run_engine(cfg, params, mesh1, 1, got1, plan=PLAN_I8)
+    assert all(r.done for r in got1)
+    assert {r.rid: tuple(r.out_tokens) for r in got1} == want
+    _assert_scale_hygiene(eng1)
+
+    got2 = _mixed_requests(cfg)
+    eng2 = _run_engine(
+        cfg, params, mesh1, 2, got2, plan=PLAN_I8,
+        scheduler=lambda **kw: PriorityScheduler(preemption=True, **kw))
+    assert all(r.done for r in got2)
+    assert {r.rid: tuple(r.out_tokens) for r in got2} == want
+    assert {r.replica for r in got2} == {0, 1}
+    for rr in range(2):
+        a, c = eng2.allocators[rr], eng2.prefix_caches[rr]
+        assert a.n_free + c.n_cached_pages == a.n_pages - a.n_reserved, rr
+    _assert_scale_hygiene(eng2)
+
+
+@pytest.mark.slow
+def test_dp2_int8_randomized_preemption_scale_hygiene(mesh1):
+    """Randomized churn (tight pool, forced preemptions) with int8 pools:
+    page conservation holds per replica AND the scale side tensors stay
+    hygienic — at every checkpoint each free page is either queued for its
+    reset or already zeroed on device."""
+    from repro.serving import ServingEngine
+    cfg = reduced(get_config("tinyllama-42m"), dtype="float32")
+    params = model.init_params(cfg, PLAN)
+    eng = ServingEngine.build_paged(
+        cfg, PLAN_I8, mesh1, 2, 64, params, page_size=8, prefill_chunk=16,
+        n_pages=17, prefix_cache=True, dp=2,
+        scheduler=lambda **kw: PriorityScheduler(preemption=True, **kw))
+    reqs = _mixed_requests(cfg, n=12, seed=5)
+    for r in reqs:
+        eng.submit(r)
+    rng = np.random.RandomState(7)
+    tick = 0
+    while (eng.has_pending() or
+           any(a is not None for a in eng.admissions)) and tick < 2000:
+        if tick % 7 == 3:                       # forced preemption churn
+            occ = [b for b in range(eng.B) if eng.admissions[b] is not None]
+            if occ:
+                eng.preempt(int(rng.choice(occ)))
+        eng.tick()
+        tick += 1
+        if tick % 25 == 0:
+            _assert_scale_hygiene(eng)
+    assert all(r.done for r in reqs)
+    for rr in range(2):
+        a, c = eng.allocators[rr], eng.prefix_caches[rr]
+        assert a.n_free + c.n_cached_pages == a.n_pages - a.n_reserved, rr
+    _assert_scale_hygiene(eng)

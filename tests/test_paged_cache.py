@@ -356,3 +356,54 @@ def test_paged_cache_arch_support():
     assert not ok and "vision" in why
     with pytest.raises(ValueError, match="vision"):
         paged_cache_template(cfg, PLAN, model_layout(cfg, PLAN), 8, 4)
+
+
+# ---------------------------------------------------------------------------
+# quantized slab pools under forced preemption
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_ssm_int8_forced_preemption_identity(mesh1):
+    """int8 KV pages + int8 SSM slabs: the preemption stash snapshots the
+    quantized slab (raw int8 payload + per-head scales, never a dequant
+    round-trip) and the restore writes it back exactly, so greedy outputs
+    stay token-identical to the fp oracle with or without preemption."""
+    from repro.serving import Request, ServingEngine
+    cfg = reduced(get_config("hymba-1.5b"), dtype="float32")
+    plan_i8 = ShardingPlan(tp=1, kv_cache_dtype="int8",
+                           ssm_cache_dtype="int8")
+    params = model.init_params(cfg, PLAN)
+    rng = np.random.RandomState(3)
+    base = [(rng.randint(2, cfg.vocab_size, L).astype(np.int32), m)
+            for L, m in zip([13, 9], [8, 6])]
+
+    def run(plan, preempt_at):
+        eng = ServingEngine.build_paged(cfg, plan, mesh1, 2, 32, params,
+                                        page_size=8, prefill_chunk=8)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=m)
+                for i, (p, m) in enumerate(base)]
+        for r in reqs:
+            eng.submit(r)
+        tick = 0
+        while (eng.has_pending() or
+               any(a is not None for a in eng.admissions)) and tick < 500:
+            if tick in preempt_at:
+                for b in range(eng.B):
+                    if eng.admissions[b] is not None:
+                        eng.preempt(b)
+                        break
+            eng.tick()
+            tick += 1
+        assert all(r.done for r in reqs)
+        return {r.rid: tuple(r.out_tokens) for r in reqs}, eng
+
+    ref, _ = run(PLAN, set())                     # fp oracle
+    base_i8, _ = run(plan_i8, set())
+    assert base_i8 == ref
+    for pts in ({1}, {3}, {1, 2, 3}):
+        got, eng = run(plan_i8, pts)
+        assert got == ref, pts
+        assert eng.stats.slab_restores == len(pts)
+        for a in eng.allocators:
+            assert a.n_free == a.n_pages - a.n_reserved
+        assert eng.slab_allocators[0].n_free == eng.n_slabs - 1

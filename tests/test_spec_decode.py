@@ -83,6 +83,34 @@ def test_trim_releases_shared_tail_without_freeing():
     assert a.n_free == 7
 
 
+def test_free_decref_trim_mark_scale_rows_dirty():
+    """Quantized-pool invariant (satellite bugfix): every release path —
+    free, decref, spec-decode trim — marks the page so its per-(page, slot)
+    scale rows are invalidated before reuse; shared pages are only marked
+    once the LAST reference drops (a live reader must keep its scales)."""
+    a = PageAllocator(12)
+    p_free = a.alloc(2)
+    p_trim = a.alloc(2)
+    p_shared = a.alloc(2)
+    a.incref(p_shared)
+    assert a.take_scale_dirty() == []      # nothing released yet
+    a.free(p_free)
+    a.trim(p_trim)
+    a.decref(p_shared)                     # rc 2 -> 1: still live
+    assert a.take_scale_dirty() == sorted(p_free + p_trim)
+    assert a.take_scale_dirty() == []      # drained exactly once
+    a.decref(p_shared)                     # last ref drops
+    assert a.take_scale_dirty() == sorted(p_shared)
+    # a dirty page re-allocated before the drain stays marked (not yet
+    # reset) but is NOT returned while live — it resurfaces when freed
+    p = a.alloc(1)
+    a.free(p)
+    p2 = a.alloc(1)
+    assert p2 == p and a.take_scale_dirty() == []
+    a.free(p2)
+    assert a.take_scale_dirty() == sorted(p)
+
+
 def test_scheduler_spec_headroom_and_trim():
     a = PageAllocator(32)
     s = FCFSScheduler(seq_budget=32, allocator=a, page_size=4,
