@@ -76,7 +76,7 @@ def rows(smoke: bool = False):
                          jnp.int32)
         ln = jnp.full((B,), S, jnp.int32)
 
-        def deq_gather(pool, sc):
+        def deq_gather(pool, sc, S=S):        # bind the loop var (B023)
             g = pool[bt.reshape(-1)].astype(jnp.float32) * \
                 sc[bt.reshape(-1)][:, None, :, None]
             return g.reshape(B, S // psz, H, psz, D) \

@@ -87,7 +87,7 @@ def run_family(name, plan_fp, plan_i8, mesh, frames_of=None):
     for rid, rows in fp_logits.items():
         got = i8_logits.get(rid, [])
         assert len(got) == len(rows), (name, rid)
-        for a, b in zip(rows, got):
+        for a, b in zip(rows, got, strict=True):
             drift = max(drift, float(np.abs(a - b).max()))
     identical = fp_toks == i8_toks
     status = "ok  " if identical and drift <= DRIFT_BOUND else "FAIL"

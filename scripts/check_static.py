@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Static-analysis gate over the repo source (CI: static-analysis job).
+
+Runs the ``repro.analysis`` checkers — Pallas VMEM budgets, page-pool
+refcount discipline, trace hygiene, docstring invariants — and fails on
+any finding that is neither suppressed (``# repro: allow[rule-id]``) nor
+listed in ``.static-baseline.json``.
+
+Usage:
+    PYTHONPATH=src python scripts/check_static.py            # gate
+    PYTHONPATH=src python scripts/check_static.py --strict   # + stale
+                                                             #   baseline
+                                                             #   entries
+                                                             #   fail too
+    ... --budget 1048576          # override the on-chip VMEM budget
+    ... --json BUDGET_vmem.json   # where the budget table is written
+    ... --checkers budget,trace   # run a subset
+    ... --runtime-ticks 0         # skip the engine recompile harness
+    ... --write-baseline          # snapshot current findings as baseline
+
+Exit status: 0 clean, 1 unbaselined findings (or, with --strict, stale
+baseline entries), 2 internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import (  # noqa: E402
+    CHECKERS,
+    apply_suppressions,
+    load_baseline,
+    split_by_baseline,
+    write_baseline,
+)
+from repro.analysis import budget as budget_mod  # noqa: E402
+from repro.analysis import trace as trace_mod  # noqa: E402
+from repro.analysis.core import REPO_ROOT, iter_sources  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on stale baseline entries")
+    ap.add_argument("--budget", type=int, default=0,
+                    help="on-chip VMEM budget in bytes "
+                         "(default: the paper MCU's usable L1)")
+    ap.add_argument("--json", default=os.path.join(REPO_ROOT,
+                                                   "BUDGET_vmem.json"),
+                    help="path for the per-kernel VMEM budget table")
+    ap.add_argument("--checkers", default="all",
+                    help="comma-separated subset of: "
+                         + ",".join(CHECKERS))
+    ap.add_argument("--runtime-ticks", type=int, default=60,
+                    help="ticks for the engine recompile harness "
+                         "(0 disables it)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current unsuppressed findings to "
+                         ".static-baseline.json and exit")
+    args = ap.parse_args(argv)
+
+    names = list(CHECKERS) if args.checkers == "all" \
+        else [c.strip() for c in args.checkers.split(",") if c.strip()]
+    unknown = [c for c in names if c not in CHECKERS]
+    if unknown:
+        print(f"unknown checkers: {', '.join(unknown)}", file=sys.stderr)
+        return 2
+
+    findings, sources_by_path = [], {}
+    budget_rows = None
+    for name in names:
+        mod = CHECKERS[name][0]
+        print(f"== {name} ==")
+        if name == "budget":
+            got, budget_rows = budget_mod.run(budget=args.budget)
+        else:
+            got, _ = mod.run()
+        # suppression lookups need the parsed sources of each target
+        for src in iter_sources(getattr(mod, "TARGETS", [])):
+            sources_by_path[src.path] = src
+        print(f"   {len(got)} raw finding(s)")
+        findings.extend(got)
+
+    if "trace" in names and args.runtime_ticks > 0:
+        print("== trace: recompile harness ==")
+        findings.extend(trace_mod.run_recompile_harness(
+            max_ticks=args.runtime_ticks))
+
+    findings = apply_suppressions(findings, sources_by_path)
+
+    if budget_rows is not None:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump({"budget_bytes": budget_rows[0]["budget_bytes"]
+                       if budget_rows else args.budget,
+                       "kernels": budget_rows}, fh, indent=2)
+            fh.write("\n")
+        print(f"\nVMEM budget table ({len(budget_rows)} kernel "
+              f"invocations) -> {os.path.relpath(args.json, REPO_ROOT)}")
+        width = max(len(r["kernel"]) for r in budget_rows) + 2
+        for r in budget_rows:
+            flag = "ok" if r["ok"] else "OVER"
+            print(f"  {r['kernel']:<{width}} {r['vmem_bytes']:>10,} B"
+                  f"  {r['utilization']:>6.1%}  {flag}")
+
+    if args.write_baseline:
+        write_baseline(findings)
+        print(f"\nwrote {len(findings)} entries to .static-baseline.json "
+              f"— fill in the justifications")
+        return 0
+
+    baseline = load_baseline()
+    new, known, stale = split_by_baseline(findings, baseline)
+
+    if known:
+        print(f"\n{len(known)} baselined finding(s) (pass):")
+        for f in known:
+            print(f"  {f.render()}")
+    if new:
+        print(f"\n{len(new)} NEW finding(s):")
+        for f in new:
+            print(f"  {f.render()}")
+    if stale:
+        verb = "FAIL" if args.strict else "warn"
+        print(f"\n{len(stale)} stale baseline entrie(s) [{verb}] — "
+              f"remove from .static-baseline.json:")
+        for fp in stale:
+            print(f"  {fp}: {baseline[fp]}")
+
+    failed = bool(new) or (args.strict and bool(stale))
+    print(f"\nstatic analysis: "
+          f"{'FAIL' if failed else 'OK'} "
+          f"({len(new)} new, {len(known)} baselined, {len(stale)} stale)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""Static-analysis gate: pluggable checkers over the repo's own source.
+
+The paper's argument is static — inference works because weights and
+state *provably* fit the on-chip memories before anything runs.  This
+package applies the same discipline to the repo: properties the test
+suite only samples dynamically (VMEM budgets, page refcount pairing,
+one-compiled-step-per-tick) are verified at every call site on every CI
+run.  Entry point: ``scripts/check_static.py``.
+
+Checkers (each a module with ``run() -> (findings, extra)``):
+
+* ``budget``     — Pallas VMEM footprints vs the MCU on-chip budget.
+* ``refcount``   — page-pool incref/decref discipline.
+* ``trace``      — host-sync / recompile hazards in the serving hot loop.
+* ``invariants`` — docstring ``Invariant:`` clauses must name enforcement.
+
+Shared machinery (``core``): fingerprinted findings, ``# repro:
+allow[rule-id]`` suppressions, and the ``.static-baseline.json``
+strict-on-new-code baseline.
+"""
+from __future__ import annotations
+
+from repro.analysis import budget, invariants, refcount, trace
+from repro.analysis.core import (  # noqa: F401  (public API)
+    BASELINE_FILE,
+    Finding,
+    SourceFile,
+    apply_suppressions,
+    load_baseline,
+    split_by_baseline,
+    write_baseline,
+)
+
+#: checker name -> (module, rule ids it can emit)
+CHECKERS = {
+    "budget": (budget, ("pallas-budget", "pallas-bounds",
+                        "pallas-divisibility")),
+    "refcount": (refcount, ("refcount-leak", "shared-free",
+                            "allocator-internals")),
+    "trace": (trace, ("host-sync", "missing-donation", "traced-shape",
+                      "jit-stability")),
+    "invariants": (invariants, ("invariant-unenforced",
+                                "invariant-stale-ref",
+                                "invariant-missing")),
+}
+
+#: every rule id a finding (or an Enforced-by: analysis:<id> reference)
+#: may legitimately use
+RULE_IDS = frozenset(
+    rid for _, rids in CHECKERS.values() for rid in rids)

@@ -1,0 +1,349 @@
+"""Pallas VMEM-budget checker: prove each kernel's working set fits on-chip.
+
+The paper's core argument is static: inference works because weights and
+state provably fit the stationary on-chip memories *before* anything runs.
+This checker applies the same discipline to the repo's Pallas kernels — for
+every kernel in ``repro.kernels`` it derives the per-invocation VMEM
+footprint from the actual BlockSpecs/grid/dtypes the kernel builds at
+representative shapes (the paper's own workloads, ``configs/paper_models``),
+and asserts it fits a configurable on-chip budget.
+
+Capture works by monkeypatching ``pl.pallas_call`` while invoking each
+kernel's *unjitted* wrapper (``fn.__wrapped__``) eagerly with concrete
+inputs: the wrapper runs its real padding/grid/BlockSpec logic, the patched
+``pallas_call`` records everything and returns zeros of ``out_shape``, and
+no kernel ever executes.  Three rules:
+
+* ``pallas-budget`` — footprint = 2 x (sum of streamed in/out block bytes)
+  + scratch bytes must fit the budget.  The factor 2 models the grid
+  pipeline's double buffering (next block's DMA in flight while the current
+  one computes); scratch is single-buffered (it persists across grid
+  steps); SMEM blocks (scalars) are excluded.  The default budget is the
+  paper MCU's usable on-chip SRAM, ``SiracusaConfig().onchip_budget``
+  (budget_fraction x (L1 + L2)) — the same number the analytical sim holds
+  resident weights to.
+* ``pallas-bounds`` — every BlockSpec index map is re-evaluated at concrete
+  grid points (with the real scalar-prefetch operands, e.g. block tables),
+  and the resulting block offsets must stay inside the padded operand.
+* ``pallas-divisibility`` — each blocked dim of the (padded) operand must
+  divide by its block extent, so no grid step reads a ragged tail.
+
+The per-kernel table lands in ``BUDGET_vmem.json`` next to the bench
+artifacts (CI uploads it); rerun via ``scripts/check_static.py``.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.analysis.core import Finding
+
+KERNELS_PATH = "src/repro/kernels"
+
+
+@dataclass
+class BlockInfo:
+    role: str                # "in" / "out"
+    block_shape: tuple
+    array_shape: tuple
+    dtype_size: int
+    smem: bool
+    index_map: object = None
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.block_shape:
+            n *= int(d) if d is not None else 1
+        return n * self.dtype_size
+
+
+@dataclass
+class CapturedCall:
+    name: str                # "<kernel>[<shape label>]"
+    kernel_file: str         # repo-relative source of the wrapper
+    grid: tuple
+    blocks: list = field(default_factory=list)
+    scratch_bytes: int = 0
+    scalar_args: tuple = ()  # concrete scalar-prefetch operands (np arrays)
+
+    def vmem_bytes(self) -> int:
+        streamed = sum(b.nbytes for b in self.blocks if not b.smem)
+        return 2 * streamed + self.scratch_bytes
+
+
+def _scratch_nbytes(shapes) -> int:
+    total = 0
+    for s in shapes or ():
+        shape = tuple(getattr(s, "shape", ()))
+        dt = np.dtype(getattr(s, "dtype", np.float32))
+        n = 1
+        for d in shape:
+            n *= int(d)
+        total += n * dt.itemsize
+    return total
+
+
+def _is_smem(spec) -> bool:
+    return "smem" in str(getattr(spec, "memory_space", "")).lower()
+
+
+def capture_invocation(label, kernel_file, fn, *args, **kwargs):
+    """Run ``fn`` (the unjitted kernel wrapper) with ``pl.pallas_call``
+    patched to record grid/BlockSpecs/scratch instead of compiling.
+    -> list of CapturedCall (one per pallas_call the wrapper made)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    captured = []
+    real = pl.pallas_call
+
+    def fake_pallas_call(kernel, *, grid=None, in_specs=None, out_specs=None,
+                         out_shape=None, scratch_shapes=(), grid_spec=None,
+                         interpret=False, **kw):
+        n_prefetch = 0
+        if grid_spec is not None:
+            grid = tuple(grid_spec.grid)
+            in_specs = list(grid_spec.in_specs)
+            out_specs = grid_spec.out_specs
+            scratch_shapes = getattr(grid_spec, "scratch_shapes", ())
+            n_prefetch = int(getattr(grid_spec, "num_scalar_prefetch", 0))
+
+        def runner(*inputs):
+            scalar = tuple(np.asarray(x) for x in inputs[:n_prefetch])
+            arrays = inputs[n_prefetch:]
+            call = CapturedCall(name=label, kernel_file=kernel_file,
+                                grid=tuple(grid), scalar_args=scalar,
+                                scratch_bytes=_scratch_nbytes(scratch_shapes))
+            for spec, arr in zip(in_specs, arrays, strict=True):
+                call.blocks.append(BlockInfo(
+                    role="in", block_shape=tuple(spec.block_shape),
+                    array_shape=tuple(arr.shape),
+                    dtype_size=np.dtype(arr.dtype).itemsize,
+                    smem=_is_smem(spec), index_map=spec.index_map))
+            outs = out_shape if isinstance(out_shape, (tuple, list)) \
+                else [out_shape]
+            specs = out_specs if isinstance(out_specs, (tuple, list)) \
+                else [out_specs]
+            for spec, sds in zip(specs, outs, strict=True):
+                call.blocks.append(BlockInfo(
+                    role="out", block_shape=tuple(spec.block_shape),
+                    array_shape=tuple(sds.shape),
+                    dtype_size=np.dtype(sds.dtype).itemsize,
+                    smem=_is_smem(spec), index_map=spec.index_map))
+            captured.append(call)
+            return jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), out_shape)
+
+        return runner
+
+    pl.pallas_call = fake_pallas_call
+    try:
+        fn(*args, **kwargs)
+    finally:
+        pl.pallas_call = real
+    return captured
+
+
+def _grid_points(grid, cap=4096):
+    total = 1
+    for g in grid:
+        total *= int(g)
+    if total <= cap:
+        return itertools.product(*(range(int(g)) for g in grid))
+    # corners + an evenly strided sample along each axis
+    axes = [sorted({0, int(g) - 1, int(g) // 2}) for g in grid]
+    return itertools.product(*axes)
+
+
+def check_call(call: CapturedCall, budget: int) -> list:
+    """Budget / bounds / divisibility findings for one captured call."""
+    findings = []
+
+    def mk(rule, msg):
+        findings.append(Finding(rule=rule, path=call.kernel_file, line=0,
+                                message=msg, scope=call.name,
+                                snippet=call.name))
+
+    used = call.vmem_bytes()
+    if used > budget:
+        mk("pallas-budget",
+           f"VMEM footprint {used} bytes exceeds on-chip budget {budget} "
+           f"(grid {call.grid}; 2x streamed blocks + scratch)")
+    for b in call.blocks:
+        if b.smem:
+            continue
+        ndim = len(b.block_shape)
+        arr = b.array_shape[-ndim:] if ndim <= len(b.array_shape) \
+            else b.array_shape
+        for d, (bs, asz) in enumerate(zip(b.block_shape, arr, strict=True)):
+            if bs is None:
+                continue
+            if int(asz) % int(bs) != 0:
+                mk("pallas-divisibility",
+                   f"{b.role} operand dim {d}: array extent {asz} not "
+                   f"divisible by block extent {bs}")
+    n_bounds_before = len(findings)
+    for pt in _grid_points(call.grid):
+        for b in call.blocks:
+            if b.smem or b.index_map is None:
+                continue
+            try:
+                idx = b.index_map(*pt, *call.scalar_args)
+            except Exception as e:  # index map itself is broken
+                mk("pallas-bounds",
+                   f"{b.role} index map raised at grid point {pt}: {e!r}")
+                continue
+            idx = tuple(int(i) for i in np.atleast_1d(np.asarray(idx)))
+            ndim = len(b.block_shape)
+            arr = b.array_shape[-ndim:]
+            for d, (i, bs, asz) in enumerate(zip(idx, b.block_shape, arr, strict=True)):
+                bs = int(bs) if bs is not None else 1
+                if i < 0 or (i + 1) * bs > int(asz):
+                    mk("pallas-bounds",
+                       f"{b.role} operand dim {d}: block index {i} "
+                       f"(x block {bs}) out of bounds for extent {asz} "
+                       f"at grid point {pt}")
+        if len(findings) > n_bounds_before:
+            break          # first failing grid point is enough per call
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Representative shapes: the paper's own workloads (configs/paper_models)
+# ---------------------------------------------------------------------------
+
+def _paper_cfg(name):
+    from repro.configs import get_config
+    return get_config(name)
+
+
+def representative_invocations():
+    """-> list of CapturedCall covering every Pallas kernel in ``kernels/``
+    at paper-model shapes.  Serving-path constants (decode batch, page
+    size, draft depth) mirror the engine defaults (page_size=16,
+    speculative k=3 -> 4 verify queries)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import (decode_attention as dec_mod,
+                               flash_attention as fl_mod, matmul as mm_mod,
+                               rmsnorm as rn_mod, ssd_scan as ssd_mod)
+
+    tl = _paper_cfg("tinyllama-42m")
+    tl64 = _paper_cfg("tinyllama-42m-64h")
+    mb = _paper_cfg("mobilebert")
+    rng = np.random.RandomState(0)
+    B, PSZ, NQ = 8, 16, 4
+
+    def f32(*shape):
+        return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+    calls = []
+
+    def cap(label, mod, fn, *args, **kw):
+        rel = f"{KERNELS_PATH}/{mod.__name__.rsplit('.', 1)[-1]}.py"
+        calls.extend(capture_invocation(label, rel, fn.__wrapped__,
+                                        *args, **kw))
+
+    # --- matmul: prompt-mode GEMMs of the paper's decoder ------------------
+    S = 128                            # paper §V-A autoregressive S
+    cap(f"matmul[tinyllama-42m ffn {S}x{tl.d_model}x{tl.d_ff}]",
+        mm_mod, mm_mod.matmul, f32(S, tl.d_model), f32(tl.d_model, tl.d_ff))
+    cap(f"matmul[tinyllama-42m lm_head {S}x{tl.d_model}x{tl.vocab_size}]",
+        mm_mod, mm_mod.matmul,
+        f32(S, tl.d_model), f32(tl.d_model, tl.vocab_size))
+
+    # --- rmsnorm -----------------------------------------------------------
+    cap(f"rmsnorm[tinyllama-42m {S}x{tl.d_model}]", rn_mod, rn_mod.rmsnorm,
+        f32(S, tl.d_model), f32(tl.d_model))
+    cap(f"rmsnorm[mobilebert 268x{mb.d_model}]", rn_mod, rn_mod.rmsnorm,
+        f32(268, mb.d_model), f32(mb.d_model))
+
+    # --- flash attention (prefill) -----------------------------------------
+    for cfg, sq, causal in ((tl, tl.max_seq_len, True),
+                            (tl64, tl64.max_seq_len, True),
+                            (mb, 268, False)):
+        cap(f"flash_attention[{cfg.name} H={cfg.n_heads} S={sq} "
+            f"D={cfg.head_dim}]", fl_mod, fl_mod.flash_attention,
+            f32(cfg.n_heads, sq, cfg.head_dim),
+            f32(cfg.n_heads, sq, cfg.head_dim),
+            f32(cfg.n_heads, sq, cfg.head_dim), causal=causal)
+
+    # --- contiguous decode attention ---------------------------------------
+    for cfg in (tl, tl64):
+        Sd = cfg.max_seq_len
+        cap(f"decode_attention[{cfg.name} B={B} H={cfg.n_heads} S={Sd}]",
+            dec_mod, dec_mod.decode_attention,
+            f32(B, cfg.n_heads, cfg.head_dim),
+            f32(B, cfg.n_heads, Sd, cfg.head_dim),
+            f32(B, cfg.n_heads, Sd, cfg.head_dim),
+            jnp.asarray(rng.randint(1, Sd, B).astype(np.int32)))
+
+    # --- paged decode / verify (fp32 and int8 pools) -----------------------
+    Sp = 512                           # serving seq budget for the pool rows
+    n_max = Sp // PSZ
+    n_pages = B * n_max + 1
+    H, D = tl.n_heads, tl.head_dim
+    bt = np.zeros((B, n_max), np.int32)
+    ids = rng.permutation(np.arange(1, n_pages))[:B * n_max]
+    bt[...] = ids.reshape(B, n_max)
+    bt_j = jnp.asarray(bt)
+    lens = jnp.asarray(rng.randint(1, Sp, B).astype(np.int32))
+    scale = jnp.asarray(rng.rand(n_pages, PSZ).astype(np.float32))
+    kp8 = jnp.asarray(rng.randint(-127, 127, (n_pages, H, PSZ, D)
+                                  ).astype(np.int8))
+    kpf = f32(n_pages, H, PSZ, D)
+    q1 = f32(B, H, D)
+    qv = f32(B, H, NQ, D)
+    cap(f"paged_decode_attention[tinyllama-42m B={B} psz={PSZ} fp32]",
+        dec_mod, dec_mod.paged_decode_attention, q1, kpf, kpf, bt_j, lens)
+    cap(f"paged_decode_attention[tinyllama-42m B={B} psz={PSZ} int8]",
+        dec_mod, dec_mod.paged_decode_attention, q1, kp8, kp8, bt_j, lens,
+        k_scale=scale, v_scale=scale)
+    cap(f"paged_verify_attention[tinyllama-42m B={B} Q={NQ} psz={PSZ} fp32]",
+        dec_mod, dec_mod.paged_verify_attention, qv, kpf, kpf, bt_j, lens)
+    cap(f"paged_verify_attention[tinyllama-42m B={B} Q={NQ} psz={PSZ} int8]",
+        dec_mod, dec_mod.paged_verify_attention, qv, kp8, kp8, bt_j, lens,
+        k_scale=scale, v_scale=scale)
+
+    # --- ssd scan (no SSM arch in the paper: dims are a paper-scale proxy,
+    # sized like the paper models' attention working set) -------------------
+    Ss, Hs, Ps, Ns = 256, 8, 64, 64
+    x, dt = f32(Ss, Hs, Ps), f32(Ss, Hs)
+    Bm, Cm, A = f32(Ss, Ns), f32(Ss, Ns), f32(Hs)
+    cap(f"ssd_scan[paper-scale proxy S={Ss} H={Hs} P={Ps} N={Ns}]",
+        ssd_mod, ssd_mod.ssd_scan, x, dt, Bm, Cm, A)
+    st8 = jnp.asarray(rng.randint(-127, 127, (Hs, Ps, Ns)).astype(np.int8))
+    cap(f"ssd_scan[paper-scale proxy int8 state0 S={Ss}]",
+        ssd_mod, ssd_mod.ssd_scan, x, dt, Bm, Cm, A,
+        state0=st8, state0_scale=f32(Hs))
+
+    return calls
+
+
+def default_budget() -> int:
+    from repro.sim.siracusa import SiracusaConfig
+    return SiracusaConfig().onchip_budget
+
+
+def run(budget: int = 0):
+    """-> (findings, table rows).  Rows go to BUDGET_vmem.json."""
+    budget = budget or default_budget()
+    findings, rows = [], []
+    for call in representative_invocations():
+        fs = check_call(call, budget)
+        findings.extend(fs)
+        rows.append({
+            "kernel": call.name, "file": call.kernel_file,
+            "grid": list(call.grid),
+            "block_bytes": sum(b.nbytes for b in call.blocks if not b.smem),
+            "scratch_bytes": call.scratch_bytes,
+            "vmem_bytes": call.vmem_bytes(),
+            "budget_bytes": budget,
+            "utilization": round(call.vmem_bytes() / budget, 4),
+            "ok": not any(f.rule == "pallas-budget" for f in fs),
+        })
+    return findings, rows

@@ -1,0 +1,153 @@
+"""Shared machinery for the static-analysis gate (``scripts/check_static.py``).
+
+Every checker produces ``Finding`` records; this module owns the three
+things all of them share:
+
+* **Fingerprints** — a finding is identified by (rule, file, enclosing
+  scope, normalized source line), NOT by line number, so baselines survive
+  unrelated edits above the flagged line.
+* **Suppressions** — ``# repro: allow[rule-id]`` on the flagged line (or
+  the line directly above it) waives that rule there.  ``allow[*]`` waives
+  every rule.  Suppressions are for reviewed, justified exceptions — the
+  comment should say why.
+* **Baseline** — ``.static-baseline.json`` at the repo root lists known
+  findings (fingerprint + justification) so the gate is strict on new
+  code: a finding matching a baseline entry passes, anything else fails.
+  ``--strict`` additionally fails on *stale* baseline entries (entries no
+  longer matched by any finding) so the baseline only ever shrinks.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import json
+import os
+import re
+from dataclasses import dataclass, field
+
+REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+BASELINE_FILE = ".static-baseline.json"
+
+_ALLOW = re.compile(r"#\s*repro:\s*allow\[([a-z*][a-z0-9_,* -]*)\]")
+
+
+@dataclass
+class Finding:
+    rule: str                 # e.g. "refcount-leak"
+    path: str                 # repo-relative
+    line: int                 # 1-based
+    message: str
+    scope: str = "<module>"   # enclosing function/class qualname
+    snippet: str = ""         # stripped source of the flagged line
+
+    @property
+    def fingerprint(self) -> str:
+        key = f"{self.rule}|{self.path}|{self.scope}|{self.snippet}"
+        return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] {self.message} "
+                f"(fingerprint {self.fingerprint})")
+
+
+@dataclass
+class SourceFile:
+    """One parsed python file plus the lookup tables checkers need."""
+    path: str                 # repo-relative, forward slashes
+    text: str
+    tree: ast.AST
+    lines: list = field(default_factory=list)
+
+    @classmethod
+    def load(cls, abspath: str) -> "SourceFile":
+        rel = os.path.relpath(abspath, REPO_ROOT).replace(os.sep, "/")
+        text = open(abspath, encoding="utf-8").read()
+        return cls(path=rel, text=text, tree=ast.parse(text),
+                   lines=text.splitlines())
+
+    def snippet(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def allowed_rules(self, line: int) -> set:
+        """Union of allow[...] ids on ``line`` and the line above it."""
+        out: set = set()
+        for ln in (line, line - 1):
+            if 1 <= ln <= len(self.lines):
+                for m in _ALLOW.finditer(self.lines[ln - 1]):
+                    out.update(p.strip() for p in m.group(1).split(","))
+        return out
+
+    def finding(self, rule: str, node, message: str,
+                scope: str = "<module>") -> Finding:
+        line = getattr(node, "lineno", 0) if not isinstance(node, int) \
+            else node
+        return Finding(rule=rule, path=self.path, line=line, message=message,
+                       scope=scope, snippet=self.snippet(line))
+
+
+def iter_sources(rel_targets) -> list:
+    """Load every .py under the given repo-relative files/directories."""
+    out = []
+    for rel in rel_targets:
+        root = os.path.join(REPO_ROOT, rel)
+        if os.path.isfile(root):
+            out.append(SourceFile.load(root))
+            continue
+        for dirpath, _, names in sorted(os.walk(root)):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    out.append(SourceFile.load(os.path.join(dirpath, name)))
+    return out
+
+
+def scope_name(stack) -> str:
+    """Qualname-ish scope from a stack of FunctionDef/ClassDef nodes."""
+    return ".".join(n.name for n in stack) or "<module>"
+
+
+def apply_suppressions(findings, sources_by_path) -> list:
+    kept = []
+    for f in findings:
+        src = sources_by_path.get(f.path)
+        allowed = src.allowed_rules(f.line) if src else set()
+        if f.rule in allowed or "*" in allowed:
+            continue
+        kept.append(f)
+    return kept
+
+
+def load_baseline(path=None) -> dict:
+    """-> {fingerprint: justification}."""
+    path = path or os.path.join(REPO_ROOT, BASELINE_FILE)
+    if not os.path.exists(path):
+        return {}
+    data = json.load(open(path, encoding="utf-8"))
+    return {e["fingerprint"]: e.get("justification", "")
+            for e in data.get("entries", [])}
+
+
+def write_baseline(findings, path=None):
+    path = path or os.path.join(REPO_ROOT, BASELINE_FILE)
+    entries = [{"fingerprint": f.fingerprint, "rule": f.rule,
+                "where": f"{f.path}:{f.scope}", "snippet": f.snippet,
+                "justification": "TODO: justify or fix"}
+               for f in sorted(findings, key=lambda f: (f.path, f.line))]
+    json.dump({"version": 1, "entries": entries},
+              open(path, "w", encoding="utf-8"), indent=2)
+
+
+def split_by_baseline(findings, baseline) -> tuple:
+    """-> (new_findings, baselined_findings, stale_fingerprints)."""
+    new, known = [], []
+    seen = set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            known.append(f)
+            seen.add(f.fingerprint)
+        else:
+            new.append(f)
+    stale = sorted(set(baseline) - seen)
+    return new, known, stale

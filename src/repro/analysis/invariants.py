@@ -1,0 +1,155 @@
+"""Docstring-invariant cross-checker.
+
+PR 5 wrote the serving-stack invariants into module docstrings as prose.
+This checker turns them into a machine-checked contract: each invariant
+is a docstring clause of the form::
+
+    Invariant: <one-line statement of the property>
+    Enforced-by: tests/test_x.py::test_name, analysis:<rule-id>
+
+and the gate verifies every clause names at least one *live* enforcement
+point.  Three rules:
+
+* ``invariant-missing`` — a module on the required list (the serving
+  stack plus the allocator) has no ``Invariant:`` clause at all.  The
+  invariants exist — PR 5 wrote them — so an empty module means they were
+  deleted or never converted.
+* ``invariant-unenforced`` — an ``Invariant:`` clause with no
+  ``Enforced-by:`` line on the next non-blank docstring line.  Prose
+  without an enforcement pointer is exactly the hand-maintained state
+  this PR retires.
+* ``invariant-stale-ref`` — an ``Enforced-by:`` reference that no longer
+  resolves: the test file is gone, the named ``def test_...`` is gone, or
+  the ``analysis:<rule-id>`` names a checker rule that does not exist.
+  This is how a refactor that silently drops a guarding test gets caught.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from repro.analysis.core import REPO_ROOT, iter_sources
+
+REQUIRED_MODULES = [
+    "src/repro/serving/engine.py",
+    "src/repro/serving/scheduler.py",
+    "src/repro/serving/prefix_cache.py",
+    "src/repro/serving/policies.py",
+    "src/repro/serving/router.py",
+    "src/repro/core/kvcache.py",
+]
+TARGETS = list(REQUIRED_MODULES)
+
+_INVARIANT = re.compile(r"^\s*Invariant:\s*(.+)$")
+_ENFORCED = re.compile(r"^\s*Enforced-by:\s*(.+)$")
+_TEST_REF = re.compile(r"^(tests/[\w./-]+\.py)::(\w+)$")
+_RULE_REF = re.compile(r"^analysis:([a-z][a-z0-9-]*)$")
+
+
+def _docstring_clauses(src):
+    """Parse Invariant/Enforced-by pairs out of the module docstring.
+    -> list of (lineno, invariant_text, [refs] | None)."""
+    doc_node = None
+    if src.tree.body and isinstance(src.tree.body[0], ast.Expr) and \
+            isinstance(src.tree.body[0].value, ast.Constant) and \
+            isinstance(src.tree.body[0].value.value, str):
+        doc_node = src.tree.body[0]
+    if doc_node is None:
+        return []
+    start = doc_node.lineno        # 1-based first line of the docstring
+    doc_lines = src.lines[start - 1:doc_node.end_lineno]
+    clauses = []
+    i = 0
+    while i < len(doc_lines):
+        m = _INVARIANT.match(doc_lines[i])
+        if not m:
+            i += 1
+            continue
+        lineno = start + i
+        text = m.group(1).strip()
+        refs = None
+        j = i + 1
+        # an Enforced-by: line may follow directly or after continuation
+        # lines of the invariant text (indented, no blank line between)
+        while j < len(doc_lines) and doc_lines[j].strip():
+            em = _ENFORCED.match(doc_lines[j])
+            if em:
+                refs = [r.strip() for r in em.group(1).split(",")
+                        if r.strip()]
+                break
+            if _INVARIANT.match(doc_lines[j]):
+                break
+            j += 1
+        clauses.append((lineno, text, refs))
+        i = j if refs is None else j + 1
+    return clauses
+
+
+def _test_has_def(abspath: str, name: str) -> bool:
+    try:
+        tree = ast.parse(open(abspath, encoding="utf-8").read())
+    except (OSError, SyntaxError):
+        return False
+    return any(isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and n.name == name for n in ast.walk(tree))
+
+
+def _check_ref(ref: str, rule_ids) -> str:
+    """-> '' if the reference resolves, else a reason string."""
+    m = _TEST_REF.match(ref)
+    if m:
+        relpath, test = m.group(1), m.group(2)
+        abspath = os.path.join(REPO_ROOT, relpath)
+        if not os.path.exists(abspath):
+            return f"test file {relpath} does not exist"
+        if not _test_has_def(abspath, test):
+            return f"{relpath} has no test named {test}"
+        return ""
+    m = _RULE_REF.match(ref)
+    if m:
+        if m.group(1) not in rule_ids:
+            return f"no checker rule named {m.group(1)!r}"
+        return ""
+    return ("unrecognized reference (expected tests/<file>.py::<test> "
+            "or analysis:<rule-id>)")
+
+
+def scan_source(src, rule_ids) -> list:
+    findings = []
+    clauses = _docstring_clauses(src)
+    if not clauses:
+        if src.path in REQUIRED_MODULES:
+            findings.append(src.finding(
+                "invariant-missing", 1,
+                "module docstring declares no Invariant: clauses — the "
+                "serving invariants from PR 5 must be stated as "
+                "machine-checked clauses here"))
+        return findings
+    for lineno, text, refs in clauses:
+        label = text if len(text) <= 60 else text[:57] + "..."
+        if refs is None:
+            findings.append(src.finding(
+                "invariant-unenforced", lineno,
+                f"Invariant {label!r} has no Enforced-by: line — name the "
+                f"test(s) or analysis:<rule-id> that enforce it"))
+            continue
+        for ref in refs:
+            reason = _check_ref(ref, rule_ids)
+            if reason:
+                findings.append(src.finding(
+                    "invariant-stale-ref", lineno,
+                    f"Invariant {label!r}: Enforced-by reference "
+                    f"{ref!r} is stale — {reason}"))
+    return findings
+
+
+def run(sources=None, rule_ids=None):
+    if rule_ids is None:
+        from repro.analysis import RULE_IDS
+        rule_ids = RULE_IDS
+    sources = sources if sources is not None else iter_sources(TARGETS)
+    findings = []
+    for src in sources:
+        findings.extend(scan_source(src, rule_ids))
+    return findings, None

@@ -1,0 +1,254 @@
+"""Refcount-discipline checker for the page-pool allocator protocol.
+
+The paged serving stack keeps pages alive by reference counting
+(``core.kvcache.PageAllocator``): slots, the radix prefix cache and the
+cross-KV cache each hold one ref per page, and a page returns to the free
+list exactly when its last ref drops.  Three AST rules keep every call
+site honest (scanned: ``core/kvcache.py``, ``serving/``,
+``core/steps.py``):
+
+* ``refcount-leak`` — every ``incref(x)`` inside a function must be
+  matched, somewhere in the same function, by either a *release* of ``x``
+  (``decref``/``free``/``trim`` mentioning the same base variable — the
+  rollback/exception arms count) or an *escape* (``x`` is returned, stored
+  into an attribute/container, or passed to another call — i.e. the ref's
+  ownership moves to a live structure that releases it later, e.g. an
+  ``Admission`` record or the radix tree).  A ref that neither escapes nor
+  is released is unreachable and leaks its pages.  The analysis is
+  intraprocedural and line-insensitive by design: it never false-positives
+  on the scheduler's rollback arms, at the cost of trusting that an
+  escaped ref's owner has its own release path (those owners are scanned
+  too).
+* ``shared-free`` — ``free()`` on a *page* allocator asserts sole
+  ownership, so calling it on pages that may be cache-shared crashes (or,
+  without the assert, would corrupt shared state).  Any ``<alloc>.free(x)``
+  where ``x`` was not just allocated in the same function must be
+  ``decref`` (or carry an allow comment).  Slab allocators are exempt —
+  slabs are exclusive by construction.
+* ``allocator-internals`` — the allocator's free list / refcounts
+  (``_free``, ``_rc``, ``_free_set``, ``_scale_dirty``) are mutated only
+  inside ``core/kvcache.py``; any store or mutating call on them elsewhere
+  bypasses the double-free/scale-hygiene machinery.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import iter_sources, scope_name
+
+TARGETS = ["src/repro/core/kvcache.py", "src/repro/serving",
+           "src/repro/core/steps.py"]
+ALLOCATOR_MODULE = "src/repro/core/kvcache.py"
+RELEASE_METHODS = {"decref", "free", "trim"}
+INTERNAL_ATTRS = {"_free", "_rc", "_free_set", "_scale_dirty"}
+MUTATING_METHODS = {"append", "pop", "add", "remove", "discard", "clear",
+                    "extend", "update", "insert", "difference_update"}
+
+
+def _base_names(node) -> set:
+    """Leftmost Name identifiers reachable in an expression — the variables
+    through which a page list is held (``leaf.pages`` -> {leaf})."""
+    out = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+    return out
+
+
+def _recv_chain(func) -> str:
+    """Dotted receiver of a method call: ``self.allocator.incref`` ->
+    ``self.allocator``."""
+    parts = []
+    n = func.value if isinstance(func, ast.Attribute) else None
+    while isinstance(n, ast.Attribute):
+        parts.append(n.attr)
+        n = n.value
+    if isinstance(n, ast.Name):
+        parts.append(n.id)
+    return ".".join(reversed(parts))
+
+
+def _method_name(call) -> str:
+    return call.func.attr if isinstance(call.func, ast.Attribute) else ""
+
+
+def _is_page_allocator(recv: str) -> bool:
+    r = recv.lower()
+    return ("alloc" in r or r.endswith("allocator")) and "slab" not in r
+
+
+class _FnScan(ast.NodeVisitor):
+    """One pass over a function body collecting the refcount events."""
+
+    def __init__(self):
+        self.increfs = []      # (node, base-name set, arg source)
+        self.released: set = set()
+        self.escaped: set = set()
+        self.frees = []        # (node, base-name set, receiver)
+        self.fresh: set = set()  # names assigned from <alloc>.alloc(...)
+
+    # pure observers: passing a ref here moves no ownership
+    _OBSERVERS = {"len", "sorted", "min", "max", "sum", "enumerate", "range",
+                  "print", "isinstance", "pages_needed", "assert"}
+
+    def visit_Call(self, node):
+        meth = _method_name(node)
+        arg_names = set()
+        for a in list(node.args) + [k.value for k in node.keywords]:
+            arg_names |= _base_names(a)
+        arg_names.discard("self")
+        if meth == "incref":
+            self.increfs.append((node, arg_names))
+        elif meth in RELEASE_METHODS:
+            self.released |= arg_names
+            if meth == "free":
+                recv = _recv_chain(node.func)
+                if _is_page_allocator(recv):
+                    self.frees.append((node, arg_names, recv))
+        elif not (isinstance(node.func, ast.Name)
+                  and node.func.id in self._OBSERVERS):
+            # ownership handed to another structure/function
+            self.escaped |= arg_names
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):
+        pass               # nested defs are scanned as their own scope
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Return(self, node):
+        if node.value is not None:
+            self.escaped |= _base_names(node.value)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node):
+        for t in node.targets:
+            if isinstance(t, (ast.Attribute, ast.Subscript)):
+                self.escaped |= _base_names(node.value)
+        val = node.value
+        if isinstance(val, ast.Call) and _method_name(val) == "alloc":
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.fresh.add(t.id)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        if isinstance(node.target, (ast.Attribute, ast.Subscript)):
+            self.escaped |= _base_names(node.value)
+        self.generic_visit(node)
+
+
+def _scan_function(src, fn, stack, findings):
+    scan = _FnScan()
+    for stmt in fn.body:
+        scan.visit(stmt)
+    scope = scope_name(stack)
+    for node, names in scan.increfs:
+        names = {n for n in names if n != "self"}
+        if not names:
+            continue       # attribute-rooted (self....): reachable by owner
+        if names & (scan.released | scan.escaped):
+            continue
+        held = ", ".join(sorted(names))
+        findings.append(src.finding(
+            "refcount-leak", node,
+            f"incref({held}) has no matching decref/free/trim and never "
+            f"escapes this function — the ref (and its pages) leaks",
+            scope))
+    for node, names, recv in scan.frees:
+        if names and names <= scan.fresh:
+            continue       # freeing pages allocated in this very function
+        findings.append(src.finding(
+            "shared-free", node,
+            f"{recv}.free({', '.join(sorted(names)) or '...'}) on pages "
+            f"that may be cache-shared — free() asserts sole ownership; "
+            f"use decref() for multi-ref releases", scope))
+
+
+def _scan_internals(src, findings):
+    """allocator-internals: flag mutations of allocator private state."""
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.stack = []
+
+        def _flag(self, node, what):
+            findings.append(src.finding(
+                "allocator-internals", node,
+                f"{what} mutates allocator-private state outside "
+                f"core/kvcache.py — go through alloc/incref/decref/"
+                f"free/trim", scope_name(self.stack)))
+
+        def visit_FunctionDef(self, node):
+            self.stack.append(node)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_ClassDef(self, node):
+            self.stack.append(node)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        def _internal_attr(self, node) -> str:
+            for n in ast.walk(node):
+                if isinstance(n, ast.Attribute) and n.attr in INTERNAL_ATTRS:
+                    return n.attr
+            return ""
+
+        def visit_Assign(self, node):
+            for t in node.targets:
+                a = self._internal_attr(t)
+                if a:
+                    self._flag(node, f"assignment to .{a}")
+            self.generic_visit(node)
+
+        def visit_AugAssign(self, node):
+            a = self._internal_attr(node.target)
+            if a:
+                self._flag(node, f"augmented assignment to .{a}")
+            self.generic_visit(node)
+
+        def visit_Call(self, node):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in MUTATING_METHODS:
+                a = self._internal_attr(f.value)
+                if a:
+                    self._flag(node, f".{a}.{f.attr}(...)")
+            self.generic_visit(node)
+
+    V().visit(src.tree)
+
+
+def scan_source(src) -> list:
+    findings = []
+
+    class W(ast.NodeVisitor):
+        def __init__(self):
+            self.stack = []
+
+        def visit_ClassDef(self, node):
+            self.stack.append(node)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        def visit_FunctionDef(self, node):
+            self.stack.append(node)
+            _scan_function(src, node, self.stack, findings)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+    W().visit(src.tree)
+    if src.path != ALLOCATOR_MODULE:
+        _scan_internals(src, findings)
+    return findings
+
+
+def run(sources=None):
+    sources = sources if sources is not None else iter_sources(TARGETS)
+    findings = []
+    for src in sources:
+        findings.extend(scan_source(src))
+    return findings, None

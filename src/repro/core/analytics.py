@@ -240,7 +240,7 @@ def param_bytes_per_device(cfg: ModelConfig, plan: ShardingPlan) -> float:
     for leaf, spec in zip(jax.tree_util.tree_leaves(ab),
                           jax.tree_util.tree_leaves(
                               pspecs, is_leaf=lambda x: isinstance(
-                                  x, type(jax.sharding.PartitionSpec())))):
+                                  x, type(jax.sharding.PartitionSpec()))), strict=True):
         nb = float(np.prod(leaf.shape)) * leaf.dtype.itemsize
         if len(spec) and spec[0] == "model" or \
                 (len(spec) > 1 and spec[1] == "model"):

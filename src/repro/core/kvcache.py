@@ -14,23 +14,32 @@ For ``plan.seq_shard_kv`` (long-context decode) the W dim is additionally
 sharded over the data axes — each data shard holds a contiguous slice of the
 sequence and attention merges partials via LSE psums (attention.py).
 
-Paged-serving invariants (the block-pool layouts further down):
+Paged-serving clauses (machine-checked by scripts/check_static.py; the
+block-pool layouts are further down):
 
-* **One static allocation** — every pool/slab is a fixed array whose
-  placement never changes; request lengths appear only as data (block
-  tables, positions, slab ids), never as shapes.
-* **Page 0 / slab 0 are scratch** — idle decode lanes point their block
-  tables (and slab ids) at the reserved index so the fused decode step
-  always runs full-batch; scratch contents are garbage by convention and
-  must never be read back.
-* **Refcounts own pages** — a page returns to the free list exactly when
-  its last reference drops (slot block-table entries, radix-prefix-cache
-  nodes and cross-KV cache entries each hold one ref per page).  Shared
-  pages are immutable; divergence goes through a copy-on-write duplicate.
-* **Slabs are exclusive** — recurrent SSM state cannot be shared or
-  re-derived from pages, so a slab has exactly one owner, is zeroed on
-  allocation, and is snapshot/restored through the engine's host-side
-  stash across preemption (``serving.engine``).
+Invariant: one static allocation — every pool/slab is a fixed array
+    whose placement never changes; request lengths appear only as data
+    (block tables, positions, slab ids), never as shapes.
+Enforced-by: tests/test_paged_cache.py::test_paged_engine_matches_contiguous_greedy, analysis:jit-stability
+
+Invariant: page 0 / slab 0 are scratch — idle decode lanes point their
+    block tables (and slab ids) at the reserved index so the fused
+    decode step always runs full-batch; scratch contents are garbage by
+    convention and must never be read back.
+Enforced-by: tests/test_paged_cache.py::test_paged_steps_match_contiguous_mixed_lengths
+
+Invariant: refcounts own pages — a page returns to the free list exactly
+    when its last reference drops (slot block-table entries,
+    radix-prefix-cache nodes and cross-KV cache entries each hold one
+    ref per page).  Shared pages are immutable; divergence goes through
+    a copy-on-write duplicate.
+Enforced-by: tests/test_paged_cache.py::test_page_allocator_reuse_and_exhaustion, analysis:refcount-leak, analysis:shared-free, analysis:allocator-internals
+
+Invariant: slabs are exclusive — recurrent SSM state cannot be shared or
+    re-derived from pages, so a slab has exactly one owner, is zeroed on
+    allocation, and is snapshot/restored through the engine's host-side
+    stash across preemption (``serving.engine``).
+Enforced-by: tests/test_paged_cache.py::test_ssm_int8_forced_preemption_identity
 """
 from __future__ import annotations
 

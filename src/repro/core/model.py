@@ -192,12 +192,12 @@ def param_count(cfg: ModelConfig) -> int:
 
     for key, val in tmpl.items():
         if key == "stacks":
-            for g, sub in zip(cfg.layer_groups(), val):
+            for g, sub in zip(cfg.layer_groups(), val, strict=True):
                 for pat_t in sub:
                     walk(pat_t, g.n_reps)
         elif key == "encoder":
             for g, sub in zip(cfg.layer_groups(cfg.encoder_layer_specs()),
-                              val["stacks"]):
+                              val["stacks"], strict=True):
                 for pat_t in sub:
                     walk(pat_t, g.n_reps)
             walk(val["final_norm"])
@@ -335,12 +335,12 @@ def _with_reps(cfg, tmpl):
     """Pair each stacks entry with its group rep count (helper for mapping)."""
     t = dict(tmpl)
     t["stacks"] = list(zip([g.n_reps for g in cfg.layer_groups()],
-                           tmpl["stacks"]))
+                           tmpl["stacks"], strict=True))
     if "encoder" in tmpl:
         enc_groups = cfg.layer_groups(cfg.encoder_layer_specs())
         t["encoder"] = dict(tmpl["encoder"])
         t["encoder"]["stacks"] = list(zip([g.n_reps for g in enc_groups],
-                                          tmpl["encoder"]["stacks"]))
+                                          tmpl["encoder"]["stacks"], strict=True))
     return t
 
 
@@ -391,7 +391,7 @@ def init_params(cfg, plan, seed=0, dtype=None):
 
     def mk(spec, reps):
         leaves = []
-        for r in range(max(reps, 1)):
+        for _ in range(max(reps, 1)):
             counter[0] += 1
             key = jax.random.fold_in(jax.random.PRNGKey(seed), counter[0])
             full = _init_full(spec, key)
@@ -428,10 +428,10 @@ def _run_stack(x, stack_params, groups, cfg, plan, lay, mode, positions,
                pages=None):
     """Scan every layer group.  cache: list aligned with groups (or None)."""
     new_cache = [] if cache is not None else None
-    for gi, (group, gparams) in enumerate(zip(groups, stack_params)):
+    for gi, (group, gparams) in enumerate(zip(groups, stack_params, strict=True)):
         gcache = cache[gi] if cache is not None else None
 
-        def body(xc, per_rep):
+        def body(xc, per_rep, group=group):   # bind the loop var (B023)
             p_rep, c_rep = per_rep
             nc_rep = []
             for pi, spec in enumerate(group.pattern):
@@ -507,7 +507,7 @@ def forward_cross_kv(params, enc_memory, cfg, plan, lay):
         return {"k": k.swapaxes(1, 2), "v": v.swapaxes(1, 2)}
 
     out = []
-    for group, gparams in zip(cfg.layer_groups(), params["stacks"]):
+    for group, gparams in zip(cfg.layer_groups(), params["stacks"], strict=True):
         per_pat = []
         for pi, spec in enumerate(group.pattern):
             if not spec.cross_attn:

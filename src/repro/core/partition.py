@@ -75,7 +75,7 @@ class ShardingPlan:
 
     def axis_sizes(self, mesh) -> dict:
         return {name: size for name, size in
-                zip(mesh.axis_names, mesh.devices.shape)}
+                zip(mesh.axis_names, mesh.devices.shape, strict=True)}
 
     def with_(self, **kw) -> "ShardingPlan":
         return replace(self, **kw)

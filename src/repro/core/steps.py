@@ -22,7 +22,7 @@ from repro.optim import AdamWConfig, adamw_update, init_opt_state
 
 
 def mesh_axis_sizes(mesh):
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
 
 
 def prepare_ledger(mesh):
@@ -284,7 +284,7 @@ def make_train_step_zero1(cfg, plan, mesh,
 
         # 1) reduce-scatter grads over 'data' (+ cross-pod psum of chunks)
         g_chunks, p_chunks, tp_mask = [], [], []
-        for g, p, spec in zip(flat_g, flat_p, flat_pspecs):
+        for g, p, spec in zip(flat_g, flat_p, flat_pspecs, strict=True):
             flat = g.reshape(-1).astype(jnp.float32)
             chunk = _z1_chunk(flat.shape[0], nd)
             pad = chunk * nd - flat.shape[0]
@@ -306,9 +306,9 @@ def make_train_step_zero1(cfg, plan, mesh,
         # 2) global grad norm (tp-sharded leaves differ across 'model';
         #    replicated leaves are identical there -> reduce separately)
         sq_tp = sum(jnp.sum(jnp.square(g)) for g, t in
-                    zip(g_chunks, tp_mask) if t) + 0.0
+                    zip(g_chunks, tp_mask, strict=True) if t) + 0.0
         sq_rep = sum(jnp.sum(jnp.square(g)) for g, t in
-                     zip(g_chunks, tp_mask) if not t) + 0.0
+                     zip(g_chunks, tp_mask, strict=True) if not t) + 0.0
         sq_tp = cc.psum(sq_tp, ("data",) + tuple(plan.tp_axes) + outer,
                         "dp/z1_norm")
         sq_rep = cc.psum(sq_rep, ("data",) + outer, "dp/z1_norm")
@@ -321,7 +321,7 @@ def make_train_step_zero1(cfg, plan, mesh,
         # 3) local chunk updates + 4) all-gather new params
         new_p_leaves, new_m, new_v = [], [], []
         for p, pc, gc, m, v in zip(flat_p, p_chunks, g_chunks,
-                                   flat_m, flat_v):
+                                   flat_m, flat_v, strict=True):
             np_, m2, v2 = adamw_leaf(pc, gc, m, v, step, scale, lr, opt_cfg)
             new_m.append(m2.reshape(m.shape))
             new_v.append(v2.reshape(v.shape))

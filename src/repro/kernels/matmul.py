@@ -33,7 +33,7 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
-def matmul(a, b, *, bm=256, bk=512, bn=256, interpret=False):
+def matmul(a, b, *, bm=256, bk=256, bn=256, interpret=False):
     """a: (M, K) @ b: (K, N) -> (M, N).  Dims must divide block shapes."""
     M, K = a.shape
     K2, N = b.shape

@@ -22,7 +22,7 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "eps", "interpret"))
-def rmsnorm(x, scale, *, bs=256, eps=1e-6, interpret=False):
+def rmsnorm(x, scale, *, bs=128, eps=1e-6, interpret=False):
     """x: (T, E); scale: (E,) -> (T, E)."""
     T, E = x.shape
     bs = min(bs, T)

@@ -69,7 +69,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, args):
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     plan = _build_plan(args, cfg, shape)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     t0 = time.time()
     cc.LEDGER.start()
 

@@ -166,9 +166,15 @@ def main(argv=None):
         pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
         decode_fn, _, _ = steps.make_decode_step(cfg, plan, mesh, dshape)
         prefill_fn, _, _ = steps.make_prefill_step(cfg, plan, mesh, pshape)
+        # donate the lane/engine cache: it is reassigned from the return at
+        # every call site (cache arg trails the prompt; enc-dec adds frames)
+        cache_arg = 3 if cfg.is_encdec else 2
         engine = ServingEngine(cfg, plan, mesh, args.slots, args.seq_budget,
-                               params, jax.jit(prefill_fn),
-                               jax.jit(decode_fn), sampler=sampler,
+                               params,
+                               jax.jit(prefill_fn,
+                                       donate_argnums=(cache_arg,)),
+                               jax.jit(decode_fn, donate_argnums=(1,)),
+                               sampler=sampler,
                                scheduler=scheduler, rng_seed=args.seed)
     rng = np.random.RandomState(args.seed)
     shared = rng.randint(2, cfg.vocab_size,

@@ -68,7 +68,7 @@ def adamw_update(params, grads, opt, cfg: AdamWConfig):
     flat_m = jax.tree_util.tree_leaves(opt["m"])
     flat_v = jax.tree_util.tree_leaves(opt["v"])
     out = [upd(p, g, m, v) for p, g, m, v in
-           zip(flat_p, flat_g, flat_m, flat_v)]
+           zip(flat_p, flat_g, flat_m, flat_v, strict=True)]
     new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
     new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
     new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])

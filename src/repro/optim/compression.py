@@ -81,7 +81,7 @@ def make_ef_grad_reducer(inner_axes=("data",), outer_axes=("pod",)):
                 new_err
         flat_g, tdef = jax.tree_util.tree_flatten(grads)
         flat_e = jax.tree_util.tree_leaves(err)
-        out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+        out = [leaf(g, e) for g, e in zip(flat_g, flat_e, strict=True)]
         return (jax.tree_util.tree_unflatten(tdef, [o[0] for o in out]),
                 jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]))
 

@@ -55,11 +55,13 @@ class Heartbeat:
                 return
 
 
-def supervise(cmd: list, cfg: FTConfig = FTConfig(), env: Optional[dict] = None):
+def supervise(cmd: list, cfg: Optional[FTConfig] = None,
+              env: Optional[dict] = None):
     """Restart-on-failure supervisor (the per-job controller).  Returns the
     final exit code.  Exit code 0 = done; anything else restarts (with
     backoff) up to max_restarts — resumption correctness is the trainee's
     job via --auto-resume."""
+    cfg = cfg if cfg is not None else FTConfig()
     restarts = 0
     while True:
         proc = subprocess.run(cmd, env={**os.environ, **(env or {})})

@@ -96,6 +96,21 @@ admission order, batch composition, replica routing, or preemption points
 
 The engine is mesh-agnostic: it drives whatever step functions
 ``core.steps`` built — 1-device CPU smoke or a full pod.
+
+Machine-checked clauses (scripts/check_static.py):
+
+Invariant: one compiled (chunk, decode, verify) step set serves every
+    request mix — request lengths flow in as data, never as traced
+    shapes, so the paged hot loop triggers zero recompiles after tick 1.
+Enforced-by: analysis:jit-stability, analysis:traced-shape
+
+Invariant: the per-tick path reads device values only through the single
+    explicit jax.device_get per step — no hidden host syncs in run().
+Enforced-by: analysis:host-sync
+
+Invariant: speculative headroom return is a refcount trim, never a
+    free() — headroom pages may be shared with the radix prefix cache.
+Enforced-by: tests/test_spec_decode.py::test_trim_releases_shared_tail_without_freeing, analysis:shared-free
 """
 from __future__ import annotations
 
@@ -305,12 +320,12 @@ class ServingEngine:
                 copy_fn, _, _ = _steps.make_page_copy_step(
                     cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
                     n_slabs=self.n_slabs if self.has_ssm else 0)
-                self.copy_fn = jax.jit(copy_fn)
+                self.copy_fn = jax.jit(copy_fn, donate_argnums=(0,))
             if self.has_cross:
                 cross_fn, _, _ = _steps.make_cross_kv_write_step(
                     cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
                     n_slabs=self.n_slabs if self.has_ssm else 0)
-                self.cross_write_fn = jax.jit(cross_fn)
+                self.cross_write_fn = jax.jit(cross_fn, donate_argnums=(1,))
         else:
             assert not prefix_cache, "prefix cache requires the paged engine"
             self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
@@ -334,7 +349,7 @@ class ServingEngine:
                 vfn, _, _ = _steps.make_verify_step(
                     cfg, plan, mesh, batch_slots, self.speculative + 1,
                     n_pages, page_size, self.n_max_pages, n_replicas=dp)
-                self.verify_fn = jax.jit(vfn)
+                self.verify_fn = jax.jit(vfn, donate_argnums=(1,))
             self.draft_sources = [PromptLookupDraft(self.prefix_caches[r])
                                   for r in range(dp)]
         # ``scheduler`` is either a ready instance (dp=1 only) or a factory
@@ -418,9 +433,10 @@ class ServingEngine:
             vfn, _, _ = _steps.make_verify_step(
                 cfg, plan, mesh, batch_slots, speculative + 1, n_pages,
                 page_size, n_max, n_replicas=dp)
-            ver = jax.jit(vfn)
+            ver = jax.jit(vfn, donate_argnums=(1,))
         return cls(cfg, plan, mesh, batch_slots, seq_budget, params,
-                   jax.jit(chunk_fn), jax.jit(dec), eos_id=eos_id,
+                   jax.jit(chunk_fn, donate_argnums=(1,)),
+                   jax.jit(dec, donate_argnums=(1,)), eos_id=eos_id,
                    sampler=sampler, paged=True, page_size=page_size,
                    n_pages=n_pages, prefill_chunk=prefill_chunk,
                    prefix_cache=prefix_cache, scheduler=scheduler,

@@ -14,23 +14,33 @@ high-priority TTFT by evicting low-priority slots; its aging term bounds
 low-priority starvation.  ``FairScheduler`` instead divides service evenly
 across clients regardless of who floods the queue.
 
-Invariants the policies must (and do) preserve:
+Machine-checked clauses the policies must (and do) preserve
+(scripts/check_static.py):
 
-* **Resource conservation** — every admission's pages/slab/cross refs are
-  released through exactly one of ``on_finish`` / ``on_preempt``; a
-  victim chosen by ``plan_preemptions`` is always a currently-active
-  admission, so no release can double-fire (leak-freedom property tests
-  cover fcfs/priority/fair at dp 1 and 2, slabs included).
-* **Output invariance** — policies only reorder WORK, never change it:
-  greedy outputs are token-identical across all policies and preemption
-  points, and sampled outputs are schedule-invariant because RNG streams
-  are per-request, not per-slot.
-* **No ping-pong** — preemption is gated on base (not aged) priority /
-  a ``preempt_after``-quantum deficit gap, and a victim's aging credit
-  resets on requeue, so a victim cannot immediately re-evict its evictor.
-* **Free slots first** — ``_admissible_without_eviction`` (pages, slabs
-  and evictable caches included) suppresses preemption whenever a free
-  slot could actually serve the starved request.
+Invariant: resource conservation — every admission's pages/slab/cross
+    refs are released through exactly one of ``on_finish`` /
+    ``on_preempt``; a victim chosen by ``plan_preemptions`` is always a
+    currently-active admission, so no release can double-fire
+    (leak-freedom property tests cover fcfs/priority/fair at dp 1 and 2,
+    slabs included).
+Enforced-by: tests/test_scheduling.py::test_policies_conserve_requests_and_pages_randomized, analysis:refcount-leak
+
+Invariant: output invariance — policies only reorder WORK, never change
+    it: greedy outputs are token-identical across all policies and
+    preemption points, and sampled outputs are schedule-invariant
+    because RNG streams are per-request, not per-slot.
+Enforced-by: tests/test_scheduling.py::test_greedy_token_identical_across_policies, tests/test_scheduling.py::test_sampled_outputs_schedule_invariant
+
+Invariant: no ping-pong — preemption is gated on base (not aged)
+    priority / a ``preempt_after``-quantum deficit gap, and a victim's
+    aging credit resets on requeue, so a victim cannot immediately
+    re-evict its evictor.
+Enforced-by: tests/test_scheduling.py::test_preemption_resets_victim_aging_no_ping_pong
+
+Invariant: free slots first — ``_admissible_without_eviction`` (pages,
+    slabs and evictable caches included) suppresses preemption whenever
+    a free slot could actually serve the starved request.
+Enforced-by: tests/test_scheduling.py::test_fair_drr_preemption_respects_free_slots, tests/test_scheduling.py::test_preemption_fires_under_page_pressure_despite_free_slot
 """
 from __future__ import annotations
 

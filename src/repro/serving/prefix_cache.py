@@ -28,26 +28,36 @@ into the new slot's block table, so chunked prefill starts at the first
 uncached token (system prompts, few-shot headers and agent scaffolds all
 collapse onto one resident copy).
 
-Invariants (see README §Serving):
+Machine-checked clauses (scripts/check_static.py; see README §Serving):
 
-1. **Page alignment** — every node key length is a positive multiple of
-   ``page_size`` and ``node.pages`` holds exactly ``len(key)/page_size``
-   page ids; children are keyed by their first page of tokens, so two
-   sequences that diverge mid-page live in separate sibling nodes.
-2. **Cache refs** — the tree holds one allocator ref per page it
-   references; pages stay alive while reachable and are released only by
-   eviction.
-3. **Immutability** — inserted pages hold KV for fully-prefilled prompt
-   positions only and are never written again (the engine inserts only the
-   ``len(prompt) // page_size`` full pages; the partial tail page stays
-   slot-private).
-4. **Copy-on-write** — a lookup may match into the middle of a node's
-   first unmatched page.  The scheduler maps the matched full pages
-   directly and asks the engine to duplicate the partial page into a
-   private copy (``steps.make_page_copy_step``) before the slot appends.
-5. **LRU eviction** — under pool pressure, leaf runs are evicted oldest
-   first, and only when no live slot shares their pages (refcount == 1),
-   so each eviction frees exactly ``len(node.pages)`` pages.
+Invariant: page alignment — every node key length is a positive multiple
+    of ``page_size`` and ``node.pages`` holds exactly ``len(key) /
+    page_size`` page ids; children are keyed by their first page of
+    tokens, so sequences that diverge mid-page live in sibling nodes.
+Enforced-by: tests/test_prefix_cache.py::test_radix_split_shares_page_aligned_prefix
+
+Invariant: cache refs — the tree holds one allocator ref per page it
+    references; pages stay alive while reachable and are released only
+    by eviction.
+Enforced-by: tests/test_prefix_cache.py::test_allocator_refcounts, analysis:refcount-leak
+
+Invariant: immutability — inserted pages hold KV for fully-prefilled
+    prompt positions only and are never written again (the engine
+    inserts only the ``len(prompt) // page_size`` full pages; the
+    partial tail page stays slot-private).
+Enforced-by: tests/test_prefix_cache.py::test_radix_partial_hit_mid_page_is_cow_source
+
+Invariant: copy-on-write — a lookup matching into the middle of a node's
+    first unmatched page maps the matched full pages directly and
+    duplicates the partial page into a private copy
+    (``steps.make_page_copy_step``) before the slot appends.
+Enforced-by: tests/test_prefix_cache.py::test_scheduler_plans_cow_and_rolls_back_under_pressure
+
+Invariant: LRU eviction — under pool pressure, leaf runs are evicted
+    oldest first, and only when no live slot shares their pages
+    (refcount == 1), so each eviction frees exactly ``len(node.pages)``
+    pages.
+Enforced-by: tests/test_prefix_cache.py::test_radix_lru_eviction_and_shared_protection
 """
 from __future__ import annotations
 

@@ -27,11 +27,18 @@ a local hit.  Affinity lookups take no page refs
 (``RadixPrefixCache.lookup`` is read-only apart from its LRU clock), so
 routing can never pin or leak pages.
 
-Replica-locality invariant: the router is the ONLY component that sees
-all replicas at once.  Everything it routes to — allocator, slab
-allocator, prefix/cross caches, scheduler queues, preemption donations —
-is replica-local, and no page/slab id ever crosses a replica boundary;
-the dp tests assert per-replica leak-freedom independently.
+Invariant: replica locality — the router is the ONLY component that
+    sees all replicas at once.  Everything it routes to — allocator,
+    slab allocator, prefix/cross caches, scheduler queues, preemption
+    donations — is replica-local, and no page/slab id ever crosses a
+    replica boundary; the dp tests assert per-replica leak-freedom
+    independently.
+Enforced-by: tests/test_dp_serving.py::test_dp2_drain_releases_both_replicas, tests/test_dp_serving.py::test_dp_policies_conserve_requests_and_pages
+
+Invariant: routing pins nothing — affinity lookups take no page refs
+    (``RadixPrefixCache.lookup`` is read-only apart from its LRU clock),
+    so routing can never pin or leak pages.
+Enforced-by: tests/test_dp_serving.py::test_router_prefix_affinity_wins, analysis:refcount-leak
 """
 from __future__ import annotations
 
@@ -96,7 +103,7 @@ class Router:
             digest = CrossKVCache.digest(req.frames)
         out = []
         for r, (c, recent) in enumerate(zip(self.prefix_caches,
-                                            self._recent)):
+                                            self._recent, strict=True)):
             s = c.lookup(prompt)[0] if c is not None else 0
             for q in recent:
                 if s >= len(toks):

@@ -44,9 +44,10 @@ Beyond attention-only archs, admission is a JOINT all-or-nothing budget:
   cross-KV write step once; ``on_cross_written`` then publishes the pages
   for later identical-frame requests.
 
-Leak-freedom invariant (asserted by tests at drain): every page is either
-free, radix-cached, or cross-cached, and every slab is free, after
-``run()``/``drain()`` retire all admissions.
+Invariant: leak freedom — every page is either free, radix-cached, or
+    cross-cached, and every slab is free, after ``run()``/``drain()``
+    retire all admissions (asserted by tests at drain).
+Enforced-by: tests/test_scheduling.py::test_drain_releases_stranded_pages, analysis:refcount-leak
 """
 from __future__ import annotations
 

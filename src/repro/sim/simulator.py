@@ -136,6 +136,6 @@ def speedup_curve(cfg: SiracusaConfig, wl_fn, n_blocks: int,
                   chips: list) -> dict:
     runs = {n: simulate_model(cfg, wl_fn(n), n, n_blocks) for n in chips}
     base = runs[chips[0]]["t_model"]
-    for n, r in runs.items():
+    for r in runs.values():
         r["speedup"] = base / r["t_model"]
     return runs

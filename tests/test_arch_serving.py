@@ -80,7 +80,7 @@ def test_paged_ssm_archs_match_contiguous(name, mesh1):
     params = model.init_params(cfg, PLAN)
     rng = np.random.RandomState(0)
     base = [(rng.randint(2, cfg.vocab_size, L).astype(np.int32), m, None)
-            for L, m in zip([5, 9, 17, 12], [6, 4, 5, 3])]
+            for L, m in zip([5, 9, 17, 12], [6, 4, 5, 3], strict=True)]
     ref = _run_contiguous_oracle(cfg, params, mesh1, base)
 
     eng = ServingEngine.build_paged(cfg, PLAN, mesh1, 2, 32, params,
@@ -105,7 +105,7 @@ def test_paged_encdec_matches_contiguous_with_shared_frames(mesh1):
               for _ in range(2)]
     base = [(rng.randint(2, cfg.vocab_size, L).astype(np.int32), m,
              frames[i % 2])
-            for i, (L, m) in enumerate(zip([5, 9, 12, 7], [5, 4, 3, 6]))]
+            for i, (L, m) in enumerate(zip([5, 9, 12, 7], [5, 4, 3, 6], strict=True))]
     ref = _run_contiguous_oracle(cfg, params, mesh1, base)
 
     eng = ServingEngine.build_paged(cfg, PLAN, mesh1, 2, 32, params,
@@ -183,7 +183,7 @@ def test_hybrid_forced_preemption_identity(mesh1):
     params = model.init_params(cfg, PLAN)
     rng = np.random.RandomState(3)
     base = [(rng.randint(2, cfg.vocab_size, L).astype(np.int32), m, None)
-            for L, m in zip([13, 9], [8, 6])]
+            for L, m in zip([13, 9], [8, 6], strict=True)]
 
     def run(preempt_at):
         eng = ServingEngine.build_paged(cfg, PLAN, mesh1, 2, 32, params,
@@ -221,7 +221,7 @@ def test_encdec_preemption_reencodes_or_hits(mesh1):
     rng = np.random.RandomState(7)
     fr = rng.randn(cfg.enc_seq_len, cfg.d_model).astype(np.float32)
     base = [(rng.randint(2, cfg.vocab_size, L).astype(np.int32), m, fr)
-            for L, m in zip([11, 8], [6, 5])]
+            for L, m in zip([11, 8], [6, 5], strict=True)]
 
     def run(preempt_at):
         eng = ServingEngine.build_paged(cfg, PLAN, mesh1, 2, 32, params,

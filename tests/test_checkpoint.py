@@ -16,7 +16,7 @@ def _assert_tree_equal(a, b):
     la = jax.tree_util.tree_leaves(a)
     lb = jax.tree_util.tree_leaves(b)
     assert len(la) == len(lb)
-    for x, y in zip(la, lb):
+    for x, y in zip(la, lb, strict=True):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 

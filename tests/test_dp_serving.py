@@ -89,7 +89,7 @@ def _mk_replicas(n, n_pages=33, prefix=True, mk_sched=None):
     caches = [RadixPrefixCache(a, PSZ) if prefix else None for a in allocs]
     mk = mk_sched or (lambda **kw: FCFSScheduler(**kw))
     scheds = [mk(seq_budget=64, allocator=a, page_size=PSZ, prefix_cache=c,
-                 stats=None) for a, c in zip(allocs, caches)]
+                 stats=None) for a, c in zip(allocs, caches, strict=True)]
     return scheds, allocs, caches
 
 
@@ -174,7 +174,7 @@ def test_dp_policies_conserve_requests_and_pages(name, mk, dp):
         # slots are replica-local: 2 per replica
         active = {rr: {} for rr in range(dp)}
         finished, preempts = set(), 0
-        for step in range(5000):
+        for _step in range(5000):
             if len(finished) == len(reqs):
                 break
             for rr in range(dp):

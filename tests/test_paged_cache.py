@@ -375,7 +375,7 @@ def test_ssm_int8_forced_preemption_identity(mesh1):
     params = model.init_params(cfg, PLAN)
     rng = np.random.RandomState(3)
     base = [(rng.randint(2, cfg.vocab_size, L).astype(np.int32), m)
-            for L, m in zip([13, 9], [8, 6])]
+            for L, m in zip([13, 9], [8, 6], strict=True)]
 
     def run(plan, preempt_at):
         eng = ServingEngine.build_paged(cfg, plan, mesh1, 2, 32, params,

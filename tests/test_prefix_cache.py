@@ -139,7 +139,7 @@ def test_page_copy_step(mesh1):
         out = copy_fn(cache, jnp.asarray([2], jnp.int32),
                       jnp.asarray([5], jnp.int32))
     for old, new in zip(jax.tree_util.tree_leaves(cache),
-                        jax.tree_util.tree_leaves(out)):
+                        jax.tree_util.tree_leaves(out), strict=True):
         # pools carry a leading replica dim: (reps, R, n_pages, G, psz, D)
         old, new = np.asarray(old)[:, 0], np.asarray(new)[:, 0]
         np.testing.assert_array_equal(new[:, 5], old[:, 2])     # copied
@@ -288,7 +288,7 @@ def test_prefix_cache_engine_matches_oracle_and_saves_pages(mesh1):
     params = model.init_params(cfg, PLAN)
     e_off, r_off, s_off = _run_engine(cfg, params, mesh1, prefix_cache=False)
     e_on, r_on, s_on = _run_engine(cfg, params, mesh1, prefix_cache=True)
-    for a, b in zip(r_off, r_on):
+    for a, b in zip(r_off, r_on, strict=True):
         assert a.done and b.done
         assert a.out_tokens == b.out_tokens, a.rid   # greedy token-identical
     # the shared prefix was actually reused, including COW divergences

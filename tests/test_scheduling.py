@@ -300,7 +300,7 @@ def test_policies_conserve_requests_and_pages_randomized(name, mk):
         for r in reqs:
             sched.submit(r)
         active, finished, preempts = {}, set(), 0
-        for step in range(5000):
+        for _step in range(5000):
             if len(finished) == len(reqs):
                 break
             free = [s for s in range(3) if s not in active]

@@ -1,0 +1,295 @@
+"""Static-analysis gate: seeded-violation fixtures (each checker must
+catch its bug class), the suppression/baseline machinery, and the real
+tree's budget-table coverage."""
+import ast
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import RULE_IDS, budget, invariants, refcount, trace
+from repro.analysis.core import (
+    SourceFile,
+    apply_suppressions,
+    split_by_baseline,
+)
+
+
+def _src(path, text):
+    text = text.lstrip("\n")
+    return SourceFile(path=path, text=text, tree=ast.parse(text),
+                      lines=text.splitlines())
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# fixture 1: unpaired incref -> refcount-leak
+# ---------------------------------------------------------------------------
+
+LEAKY = """
+class Cache:
+    def pin(self, pages):
+        self.allocator.incref(pages)   # held ref never released/escaped
+
+    def pin_ok(self, pages):
+        self.allocator.incref(pages)
+        self.nodes[1] = pages          # ownership escapes to the tree
+
+    def rollback_ok(self, pages):
+        self.allocator.incref(pages)
+        try:
+            self.commit()
+        except RuntimeError:
+            self.allocator.decref(pages)
+"""
+
+
+def test_unpaired_incref_detected():
+    findings = refcount.scan_source(_src("src/repro/serving/fx.py", LEAKY))
+    assert _rules(findings) == ["refcount-leak"]
+    assert findings[0].scope == "Cache.pin"
+
+
+# ---------------------------------------------------------------------------
+# fixture 2: free() on possibly-shared pages -> shared-free
+# ---------------------------------------------------------------------------
+
+SHARED_FREE = """
+class Sched:
+    def release(self, adm):
+        self.allocator.free(adm.pages)     # may be radix-shared: decref!
+
+    def fresh_ok(self):
+        pages = self.allocator.alloc(4)
+        self.allocator.free(pages)         # sole owner by construction
+
+    def slab_ok(self, adm):
+        self.slab_alloc.free(adm.slab)     # slabs are exclusive: exempt
+"""
+
+
+def test_shared_page_free_detected():
+    findings = refcount.scan_source(_src("src/repro/serving/fx.py",
+                                         SHARED_FREE))
+    assert _rules(findings) == ["shared-free"]
+    assert findings[0].scope == "Sched.release"
+
+
+# ---------------------------------------------------------------------------
+# fixture 3: oversized BlockSpec -> pallas-budget (plus shape hygiene)
+# ---------------------------------------------------------------------------
+
+def test_oversized_blockspec_detected():
+    import functools
+
+    import jax.experimental.pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    def fat_call(x):
+        T, E = x.shape
+        return pl.pallas_call(
+            kernel, grid=(1,),
+            in_specs=[pl.BlockSpec((T, E), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((T, E), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((T, E), x.dtype),
+            interpret=True)(x)
+
+    import jax
+    (call,) = budget.capture_invocation(
+        "fat[T=512 E=512]", "src/repro/kernels/fx.py",
+        functools.partial(fat_call), jnp.zeros((512, 512), jnp.float32))
+    # 2 * 2 * 512*512*4 = 4 MiB streamed, over any MCU-ish budget
+    findings = budget.check_call(call, budget=1_000_000)
+    assert "pallas-budget" in _rules(findings)
+    assert call.vmem_bytes() == 2 * 2 * 512 * 512 * 4
+
+
+def test_divisibility_and_bounds_detected():
+    import functools
+
+    import jax
+    import jax.experimental.pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def bad_call(x):
+        T, E = x.shape
+        return pl.pallas_call(
+            kernel, grid=(3,),                       # 3 * 200 > 512 rows
+            in_specs=[pl.BlockSpec((200, E), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((200, E), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((T, E), x.dtype),
+            interpret=True)(x)
+
+    (call,) = budget.capture_invocation(
+        "bad[512x64]", "src/repro/kernels/fx.py",
+        functools.partial(bad_call), jnp.zeros((512, 64), jnp.float32))
+    rules = set(_rules(budget.check_call(call, budget=10**9)))
+    assert "pallas-divisibility" in rules    # 512 % 200 != 0
+    assert "pallas-bounds" in rules          # block 2 starts at row 400
+
+
+# ---------------------------------------------------------------------------
+# fixture 4: .item() in the tick loop -> host-sync
+# ---------------------------------------------------------------------------
+
+TICKY = """
+class ServingEngine:
+    def run(self, max_ticks):
+        for _ in range(max_ticks):
+            self.tick()
+
+    def tick(self):
+        logits, self.cache = self.decode_fn(self.params, self.cache)
+        for b in range(self.B):
+            tok = logits[b].argmax().item()   # per-slot device sync
+            self.emit(b, tok)
+        self._stats_tick()
+
+    def _stats_tick(self):
+        self.stats.sum_logit += float(self.head_logit)
+
+    def helper_not_hot(self, x):
+        return x.item()                       # unreachable from run/tick
+"""
+
+
+def test_item_in_tick_loop_detected():
+    findings = trace.scan_source(_src(trace.ENGINE_PATH, TICKY))
+    hot = [f for f in findings if f.rule == "host-sync"]
+    assert len(hot) == 1                 # .item() in tick; helper exempt
+    assert hot[0].scope == "ServingEngine.tick"
+    assert ".item()" in hot[0].snippet
+
+
+def test_traced_shape_and_missing_donation_detected():
+    import textwrap
+    src = _src(trace.ENGINE_PATH, textwrap.dedent("""
+    import jax
+
+    class ServingEngine:
+        def build(self, fn):
+            self.decode_fn = jax.jit(fn)             # no donate_argnums
+
+        def tick(self):
+            S = len(self.req.prompt)
+            out, self.cache = self.prefill_fn(self.params,
+                                              self.prompt[:, :S],
+                                              self.cache)
+    """))
+    rules = _rules(trace.scan_source(src))
+    assert "missing-donation" in rules
+    assert "traced-shape" in rules
+
+
+# ---------------------------------------------------------------------------
+# fixture 5: stale Invariant: clause -> invariant-stale-ref
+# ---------------------------------------------------------------------------
+
+STALE = '''
+"""Module with invariants.
+
+Invariant: pages are refcounted.
+Enforced-by: tests/test_paged_cache.py::test_totally_gone_test
+
+Invariant: no recompiles in the hot loop.
+Enforced-by: analysis:no-such-rule
+
+Invariant: prose only, nobody enforces this.
+
+Invariant: this one is fine.
+Enforced-by: analysis:refcount-leak
+"""
+X = 1
+'''
+
+
+def test_stale_invariant_clause_detected():
+    findings = invariants.scan_source(
+        _src("src/repro/serving/fx.py", STALE), RULE_IDS)
+    rules = _rules(findings)
+    assert rules.count("invariant-stale-ref") == 2   # dead test + bad rule
+    assert rules.count("invariant-unenforced") == 1  # the prose-only one
+    assert "invariant-missing" not in rules
+
+
+def test_missing_invariants_flagged_for_required_module():
+    src = _src("src/repro/serving/scheduler.py", '"""No clauses here."""')
+    findings = invariants.scan_source(src, RULE_IDS)
+    assert _rules(findings) == ["invariant-missing"]
+
+
+# ---------------------------------------------------------------------------
+# suppression and baseline paths
+# ---------------------------------------------------------------------------
+
+SUPPRESSED = """
+class Cache:
+    def pin(self, pages):
+        # repro: allow[refcount-leak]  -- ref owned by C layer
+        self.allocator.incref(pages)
+
+    def pin2(self, pages):
+        self.allocator.incref(pages)  # repro: allow[refcount-leak]
+
+    def pin_star(self, pages):
+        self.allocator.incref(pages)  # repro: allow[*]
+
+    def pin_wrong_rule(self, pages):
+        self.allocator.incref(pages)  # repro: allow[shared-free]
+"""
+
+
+def test_allow_comment_suppresses_only_that_rule():
+    src = _src("src/repro/serving/fx.py", SUPPRESSED)
+    findings = refcount.scan_source(src)
+    assert len(findings) == 4            # scanner itself flags all four
+    kept = apply_suppressions(findings, {src.path: src})
+    assert len(kept) == 1                # line-above, same-line and * work
+    assert kept[0].scope == "Cache.pin_wrong_rule"
+
+
+def test_baseline_splits_known_new_and_stale():
+    src = _src("src/repro/serving/fx.py", LEAKY)
+    (finding,) = refcount.scan_source(src)
+    baseline = {finding.fingerprint: "known issue",
+                "deadbeefdeadbeef": "fixed long ago"}
+    new, known, stale = split_by_baseline([finding], baseline)
+    assert not new and [f.fingerprint for f in known] == [
+        finding.fingerprint]
+    assert stale == ["deadbeefdeadbeef"]
+    # an unbaselined finding is NEW
+    new, known, stale = split_by_baseline([finding], {})
+    assert [f.fingerprint for f in new] == [finding.fingerprint]
+
+
+def test_fingerprint_survives_line_shifts():
+    moved = "# a new comment pushes everything down\n\n" + LEAKY.lstrip("\n")
+    (f1,) = refcount.scan_source(_src("src/repro/serving/fx.py", LEAKY))
+    (f2,) = refcount.scan_source(_src("src/repro/serving/fx.py", moved))
+    assert f1.line != f2.line
+    assert f1.fingerprint == f2.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# the real tree: budget table covers every Pallas kernel at paper shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_budget_table_covers_all_kernels_and_tree_is_clean():
+    findings, rows = budget.run()
+    assert findings == []
+    covered = {r["file"].rsplit("/", 1)[-1] for r in rows}
+    assert covered == {"matmul.py", "rmsnorm.py", "flash_attention.py",
+                       "decode_attention.py", "ssd_scan.py"}
+    assert all(r["ok"] and 0 < r["utilization"] <= 1 for r in rows)
+
+
+def test_invariant_clauses_on_tree_are_live():
+    findings, _ = invariants.run()
+    assert findings == []

@@ -49,7 +49,7 @@ def main():
             state1, st = t1(state1, b)
             l1.append(float(st["loss"]))
 
-    rel = max(abs(a - b) / abs(a) for a, b in zip(ls, l1))
+    rel = max(abs(a - b) / abs(a) for a, b in zip(ls, l1, strict=True))
     print(f"std={ls} zero1={l1} rel={rel:.2e}")
     print("ZERO1-OK" if rel < 1e-4 else "ZERO1-FAIL")
     sys.exit(0 if rel < 1e-4 else 1)
