@@ -26,6 +26,7 @@ METRICS = {
     "ttft_p99_ms_high": -1,   # QoS headline of the priority scenario
     "cpu_us_per_call": -1,    # kernels bench (BENCH_kernels.json rows)
     "accepted_tokens_per_tick": +1,   # speculative-decoding scenario
+    "ttft_p99_ms_burst": -1,  # disaggregated-serving scenario headline
 }
 
 

@@ -1,9 +1,12 @@
 """Serving throughput bench: contiguous vs paged vs paged+prefix-cache,
 plus a mixed-priority QoS scenario (FCFS vs preemptive priority), a
 dp-scaling scenario, a hybrid-arch (attention+SSM slab) row whose
-outputs are asserted token-identical to the contiguous oracle, and a
+outputs are asserted token-identical to the contiguous oracle, a
 speculative-decoding row (prompt-lookup drafts + k-token verify) gated
-on accepted tokens per verify tick staying above one.
+on accepted tokens per verify tick staying above one, and a
+disaggregated-serving scenario (dp=2 interleaved vs ``disagg=(1, 1)``)
+gated on burst p99 TTFT decoupling from the decode tail at tokens/s
+within tolerance.
 
 Drives the full ServingEngine on a shared-system-prompt workload (every
 request = common prefix + unique suffix — the traffic shape the radix
@@ -268,6 +271,113 @@ def run_spec_mode(cfg, plan, mesh, params, sz, k=4):
     return row
 
 
+def run_disagg_mode(cfg, plan, mesh, params, smoke=False):
+    """Disaggregated-serving scenario: a decode-heavy background flood
+    holds every page pool's full horizon while a burst of long-prefill
+    interactive requests lands mid-run.  dp=2 interleaved admits the
+    burst only as background requests retire (their pages are reserved
+    through max_new), so burst TTFT rides the decode tail; dp=2
+    ``disagg=(1, 1)`` budgets prompt-only pages on the prefill replica —
+    the burst prefills immediately and its first tokens land before any
+    decode capacity frees.  Greedy outputs are asserted token-identical
+    across the two modes and the burst p99 TTFT improvement is the gated
+    headline, with tokens/s within tolerance (the lock-step single-host
+    loop executes both roles' compiled steps serially, so disagg pays the
+    unbatched prefill rounds; the TTFT decoupling is the signal).
+
+    The shape is fixed (same for --smoke and full): the pool exactly
+    holds the whole background on one replica — equal decode width in
+    both modes — while the interleaved per-replica slack stays below the
+    burst's page horizon.  Compile time is excluded by a warm-up flood on
+    each engine before the measured phase.  -> (rows, outputs) for modes
+    dp2-interleaved / dp2-disagg."""
+    from repro.serving import Request, ServingEngine
+
+    SLOTS, N_PAGES, SEQ, CHUNK, PSZ = 4, 25, 112, 16, 8
+    BG_N, BG_PROMPT, BG_NEW = 4, 4, 40      # 4 x 6 pages = the whole pool
+    BU_N, BU_PROMPT, BU_NEW = 2, 96, 8      # 13-page horizon > 12 slack
+    BURST_AT = 4
+
+    def drive(disagg):
+        eng = ServingEngine.build_paged(
+            cfg, plan, mesh, SLOTS, SEQ, params, page_size=PSZ,
+            prefill_chunk=CHUNK, n_pages=N_PAGES, dp=2, disagg=disagg)
+        # warm-up: compile every step (including the committed-input
+        # prefill entry) before the measured phase
+        warm = [Request(rid=10_000 + i,
+                        prompt=np.arange(2, CHUNK + 5).astype(np.int32) + i,
+                        max_new_tokens=2) for i in range(4)]
+        for r in warm:
+            eng.submit(r)
+        eng.run(max_ticks=50_000)
+        h0, p0 = eng.stats.handoffs, eng.stats.pages_transferred
+        rng = np.random.RandomState(9)
+        vocab = cfg.vocab_size
+        bg = [Request(rid=i, prompt=rng.randint(2, vocab, BG_PROMPT)
+                      .astype(np.int32), max_new_tokens=BG_NEW)
+              for i in range(BG_N)]
+        bu = [Request(rid=100 + i, prompt=rng.randint(2, vocab, BU_PROMPT)
+                      .astype(np.int32), max_new_tokens=BU_NEW)
+              for i in range(BU_N)]
+        t0 = time.perf_counter()
+        for r in bg:
+            eng.submit(r)
+        tick = 0
+        while eng.has_pending() or \
+                any(a is not None for a in eng.admissions):
+            if tick == BURST_AT:
+                for r in bu:
+                    eng.submit(r)
+            eng.tick()
+            tick += 1
+            assert tick < 50_000, "disagg scenario did not converge"
+        eng.drain()
+        dt = time.perf_counter() - t0
+        stats = eng.stats
+        assert all(r.done for r in bg + bu)
+        toks = sum(len(r.out_tokens) for r in bg + bu)
+        ttft = [stats.request_ttft[r.rid] for r in bg + bu]
+        ttft_bu = [stats.request_ttft[r.rid] for r in bu]
+        row = {"mode": "dp2-disagg" if disagg else "dp2-interleaved",
+               "requests": len(bg) + len(bu),
+               "decoded_tokens": toks,
+               "tokens_per_s": toks / dt,
+               "ttft_p50_ms": float(np.median(ttft)) * 1e3,
+               "ttft_p99_ms": float(np.percentile(ttft, 99)) * 1e3,
+               "ttft_p99_ms_burst": float(np.percentile(ttft_bu, 99)) * 1e3,
+               "handoffs": stats.handoffs - h0,
+               "pages_transferred": stats.pages_transferred - p0,
+               "wall_s": dt}
+        return row, {r.rid: tuple(r.out_tokens) for r in bg + bu}
+
+    int_row, int_out = drive(None)
+    dis_row, dis_out = drive((1, 1))
+    assert int_out == dis_out, "outputs changed under disaggregation"
+    # every request prefilled on replica 0 and crossed exactly once
+    assert dis_row["handoffs"] == BG_N + BU_N
+    assert dis_row["pages_transferred"] > 0
+    speedup = int_row["ttft_p99_ms_burst"] / \
+        max(dis_row["ttft_p99_ms_burst"], 1e-9)
+    tps_ratio = dis_row["tokens_per_s"] / max(int_row["tokens_per_s"], 1e-9)
+    print(f"# disagg 1:1: burst p99 TTFT "
+          f"interleaved={int_row['ttft_p99_ms_burst']:.1f}ms "
+          f"disagg={dis_row['ttft_p99_ms_burst']:.1f}ms ({speedup:.2f}x) "
+          f"tok/s ratio={tps_ratio:.2f} "
+          f"({dis_row['handoffs']} handoffs, "
+          f"{dis_row['pages_transferred']} pages transferred)")
+    # the point of disaggregation: burst TTFT decouples from the decode
+    # tail (observed ~2-2.6x; 1.2x leaves slack) at tokens/s within
+    # tolerance (observed ~0.73-0.89x).  Smoke-noise handling mirrors the
+    # priority gate: measured walls are tens of ms, so on shared CI
+    # runners warn instead of flaking; full mode asserts hard.
+    if speedup < 1.2 or tps_ratio < 0.6:
+        msg = (f"disagg burst p99 speedup {speedup:.2f}x (< 1.2x) or "
+               f"tok/s ratio {tps_ratio:.2f} (< 0.6)")
+        assert smoke, msg
+        print(f"::warning::{msg} — smoke wall-clock noise?")
+    return [int_row, dis_row]
+
+
 def _kv_pool_bytes(cfg, plan, n_pages, page_size):
     """Exact KV/cross pool footprint (payload + scale side tensors) from
     the cache template — what the engine would allocate, without building
@@ -460,14 +570,16 @@ def rows(smoke: bool = False):
           f"{quant_row['max_concurrent_fp16']} at the same byte budget "
           f"({quant_row['n_pages_int8']} vs {quant_row['n_pages_fp16']} "
           f"pages)")
+    # disaggregated prefill/decode: burst TTFT decoupling, oracle-checked
+    disagg_rows = run_disagg_mode(cfg, plan, mesh, params, smoke=smoke)
     return out + [fcfs_row, pre_row, dp1_row, dp2_row, hybrid_row, spec_row,
-                  quant_row]
+                  quant_row] + disagg_rows
 
 
 def main(smoke=False, json_path=None):
     import jax
     out = rows(smoke=smoke)
-    keys = list(out[-1])
+    keys = list(dict.fromkeys(k for r in out for k in r))
     print(",".join(keys))
     for r in out:
         print(",".join(f"{r.get(k):.4g}" if isinstance(r.get(k), float)

@@ -24,6 +24,14 @@ token-identical to the FLOAT oracle — speculative off AND on, across
 dp {1, 2} x {fcfs, priority, fair} — so quantization composes with
 speculation, preemption and dp routing without changing a single token.
 
+Every oracle runs with ``overlap=False`` (the serial plan-dispatch-
+collect loop) while the candidate rows run pipelined, so each comparison
+also certifies that one-tick-ahead execution changes no token.  A third
+matrix covers disaggregation: dp=2 with ``disagg=(1, 1)`` — prefill on
+replica 0, page-transfer handoff, decode on replica 1 — against the dp=1
+serial oracle, across {greedy, seeded sampling} x spec {0, K} plus an
+int8 row.
+
     PYTHONPATH=src python scripts/check_spec_identity.py
 """
 import functools
@@ -48,7 +56,7 @@ def build_prompts(cfg, rng, n=6):
 
 
 def run_engine(cfg, plan, params, mesh, prompts, *, speculative, policy,
-               temperature, dp):
+               temperature, dp, overlap=True, disagg=None):
     from repro.serving import (FairScheduler, PriorityScheduler, Request,
                                SamplerConfig, ServingEngine)
     scheduler = None
@@ -60,7 +68,7 @@ def run_engine(cfg, plan, params, mesh, prompts, *, speculative, policy,
         cfg, plan, mesh, 2, 64, params, page_size=8, prefill_chunk=8,
         sampler=SamplerConfig(temperature=temperature, top_k=40),
         prefix_cache=True, scheduler=scheduler, rng_seed=SEED, dp=dp,
-        speculative=speculative)
+        speculative=speculative, overlap=overlap, disagg=disagg)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=12,
                     priority=10 if i % 3 == 0 else 0, client_id=i % 2)
             for i, p in enumerate(prompts)]
@@ -92,7 +100,8 @@ def main():
                 tag = f"dp={dp} policy={policy} temp={temp}"
                 oracle, _ = run_engine(cfg, plan, params, mesh, prompts,
                                        speculative=0, policy=policy,
-                                       temperature=temp, dp=dp)
+                                       temperature=temp, dp=dp,
+                                       overlap=False)
                 spec, st = run_engine(cfg, plan, params, mesh, prompts,
                                       speculative=K, policy=policy,
                                       temperature=temp, dp=dp)
@@ -114,7 +123,7 @@ def main():
         for policy in ("fcfs", "priority", "fair"):
             oracle, _ = run_engine(cfg, plan, params, mesh, prompts,
                                    speculative=0, policy=policy,
-                                   temperature=0.0, dp=dp)
+                                   temperature=0.0, dp=dp, overlap=False)
             for spec_k in (0, K):
                 tag = f"kv=int8 dp={dp} policy={policy} spec={spec_k}"
                 got, st = run_engine(cfg, plan_i8, params, mesh, prompts,
@@ -130,6 +139,44 @@ def main():
                     if got.get(rid) != oracle[rid]:
                         print(f"  rid {rid}:\n    oracle {oracle[rid]}"
                               f"\n    int8   {got.get(rid)}")
+    # disaggregated serving: dp=2 prefill/decode split vs the dp=1 serial
+    # oracle — the page-transfer handoff must change no token either
+    for temp in (0.0, 0.7):
+        oracle, _ = run_engine(cfg, plan, params, mesh, prompts,
+                               speculative=0, policy="fcfs",
+                               temperature=temp, dp=1, overlap=False)
+        for spec_k in (0, K):
+            tag = f"disagg=1:1 temp={temp} spec={spec_k}"
+            got, st = run_engine(cfg, plan, params, mesh, prompts,
+                                 speculative=spec_k, policy="fcfs",
+                                 temperature=temp, dp=2, disagg=(1, 1))
+            total_accepted += st.spec_accepted
+            if got == oracle and st.handoffs == len(prompts):
+                print(f"ok   {tag}  handoffs={st.handoffs} "
+                      f"pages_transferred={st.pages_transferred}")
+                continue
+            failures += 1
+            if st.handoffs != len(prompts):
+                print(f"FAIL {tag}: {st.handoffs} handoffs for "
+                      f"{len(prompts)} requests — the disagg path was "
+                      f"not exercised")
+            else:
+                print(f"FAIL {tag}: token divergence vs serial dp=1 oracle")
+                for rid in sorted(oracle):
+                    if got.get(rid) != oracle[rid]:
+                        print(f"  rid {rid}:\n    oracle {oracle[rid]}"
+                              f"\n    disagg {got.get(rid)}")
+    oracle, _ = run_engine(cfg, plan, params, mesh, prompts, speculative=0,
+                           policy="fcfs", temperature=0.0, dp=1,
+                           overlap=False)
+    got, st = run_engine(cfg, plan_i8, params, mesh, prompts, speculative=0,
+                         policy="fcfs", temperature=0.0, dp=2,
+                         disagg=(1, 1))
+    if got == oracle:
+        print(f"ok   disagg=1:1 kv=int8 greedy  handoffs={st.handoffs}")
+    else:
+        failures += 1
+        print("FAIL disagg=1:1 kv=int8 greedy: token divergence")
     if total_accepted == 0:
         print("FAIL: no draft token was ever accepted — the verify path "
               "was not exercised")

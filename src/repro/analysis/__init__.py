@@ -38,7 +38,7 @@ CHECKERS = {
     "refcount": (refcount, ("refcount-leak", "shared-free",
                             "allocator-internals")),
     "trace": (trace, ("host-sync", "missing-donation", "traced-shape",
-                      "jit-stability")),
+                      "jit-stability", "async-barrier")),
     "invariants": (invariants, ("invariant-unenforced",
                                 "invariant-stale-ref",
                                 "invariant-missing")),

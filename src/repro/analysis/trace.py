@@ -3,7 +3,7 @@
 The engine's throughput story rests on ONE compiled (chunk, decode) step
 pair serving every request mix — no per-tick recompiles, no hidden
 device->host syncs beyond the explicit ``jax.device_get`` at each step's
-single read-back point.  Three static rules plus a runtime harness:
+single read-back point.  Four static rules plus a runtime harness:
 
 * ``host-sync`` — two scopes.  (a) In ``ServingEngine`` methods reachable
   from the ``run()``/``tick()`` hot loop (computed from the intra-class
@@ -25,6 +25,16 @@ single read-back point.  Three static rules plus a runtime harness:
   whose argument contains a slice with a non-constant Python bound: the
   bound becomes part of the traced shape, so every distinct value
   recompiles (the paged engine exists to avoid exactly this).
+* ``async-barrier`` — the pipelined engine's overlap contract: in
+  ``ServingEngine`` methods reachable from the plan/dispatch phases
+  (``_plan_phase``/``_dispatch_phase``, via the intra-class call graph),
+  any ``jax.device_get``, ``.block_until_ready()`` or ``.item()`` — a
+  host barrier there serializes the host against the device mid-pipeline,
+  silently destroying the one-tick-ahead overlap.  Barriers belong only
+  at collect points (``_collect_phase``, which the rule does not scan).
+  Scope note: the rule names the three explicit barrier forms;
+  ``np.asarray`` on a device value also syncs but is covered by the
+  ``host-sync`` taint rule where it matters (step-function results).
 
 Runtime harness (``run_recompile_harness``): builds a tiny paged engine on
 the paper's TinyLlama config, drives a mixed-length request batch to
@@ -46,6 +56,7 @@ TARGETS = ["src/repro/serving", "src/repro/launch/serve.py",
 ENGINE_PATH = "src/repro/serving/engine.py"
 DONATION_PATHS = ("src/repro/serving/", "src/repro/launch/serve.py")
 HOT_ROOTS = {"run", "tick"}
+ASYNC_ROOTS = {"_plan_phase", "_dispatch_phase"}
 HOST_CONVERTERS = {"float", "int"}
 NP_CONVERTERS = {"asarray", "array"}
 
@@ -76,8 +87,8 @@ def _contains_device_get(node) -> bool:
 # engine hot loop
 # ---------------------------------------------------------------------------
 
-def _engine_hot_methods(cls: ast.ClassDef) -> dict:
-    """Methods transitively reachable from run()/tick() via self.X() calls.
+def _reachable_methods(cls: ast.ClassDef, roots) -> dict:
+    """Methods transitively reachable from ``roots`` via self.X() calls.
     -> {name: FunctionDef}."""
     methods = {n.name: n for n in cls.body
                if isinstance(n, ast.FunctionDef)}
@@ -93,7 +104,7 @@ def _engine_hot_methods(cls: ast.ClassDef) -> dict:
                 out.add(n.func.attr)
         edges[name] = out
     seen = set()
-    frontier = [r for r in HOT_ROOTS if r in methods]
+    frontier = [r for r in roots if r in methods]
     while frontier:
         m = frontier.pop()
         if m in seen:
@@ -101,6 +112,12 @@ def _engine_hot_methods(cls: ast.ClassDef) -> dict:
         seen.add(m)
         frontier.extend(edges[m] - seen)
     return {m: methods[m] for m in seen}
+
+
+def _engine_hot_methods(cls: ast.ClassDef) -> dict:
+    """Methods transitively reachable from run()/tick() via self.X() calls.
+    -> {name: FunctionDef}."""
+    return _reachable_methods(cls, HOT_ROOTS)
 
 
 def _scan_hot_method(src, cls_name, fn, findings):
@@ -162,11 +179,39 @@ def _scan_hot_method(src, cls_name, fn, findings):
                             f"distinct value recompiles the step", scope))
 
 
+def _scan_async_method(src, cls_name, fn, findings):
+    """Flag host barriers inside the plan/dispatch closure — between
+    dispatching a tick's steps and the next plan phase, the host must
+    never block on the device (barriers belong at collect points)."""
+    scope = f"{cls_name}.{fn.name}"
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Call):
+            chain = _attr_chain(n.func)
+            if chain.endswith("device_get"):
+                findings.append(src.finding(
+                    "async-barrier", n,
+                    "jax.device_get in the plan/dispatch path blocks the "
+                    "host on in-flight device work — read results at the "
+                    "collect point instead", scope))
+                continue
+            if isinstance(n.func, ast.Attribute) and \
+                    n.func.attr in ("block_until_ready", "item"):
+                findings.append(src.finding(
+                    "async-barrier", n,
+                    f".{n.func.attr}() in the plan/dispatch path is a "
+                    f"host barrier mid-pipeline — it serializes planning "
+                    f"against the dispatched step and destroys the "
+                    f"one-tick-ahead overlap", scope))
+
+
 def _scan_engine(src, findings):
     for node in src.tree.body:
         if isinstance(node, ast.ClassDef) and node.name == "ServingEngine":
             for _, fn in sorted(_engine_hot_methods(node).items()):
                 _scan_hot_method(src, node.name, fn, findings)
+            for _, fn in sorted(_reachable_methods(node,
+                                                   ASYNC_ROOTS).items()):
+                _scan_async_method(src, node.name, fn, findings)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,13 @@ Invariant: slabs are exclusive — recurrent SSM state cannot be shared or
     allocation, and is snapshot/restored through the engine's host-side
     stash across preemption (``serving.engine``).
 Enforced-by: tests/test_paged_cache.py::test_ssm_int8_forced_preemption_identity
+
+Invariant: page handoff is an atomic ref transfer — moving a request's
+    resident pages to another replica (``handoff_refs``) drops the source
+    slot's references exactly once and only after verifying every
+    destination page is freshly allocated (refcount 1, no inherited
+    sharers); a page is never referenced by two replicas' allocators.
+Enforced-by: tests/test_page_transfer.py::test_handoff_refs_decrefs_source_once, analysis:refcount-leak
 """
 from __future__ import annotations
 
@@ -363,6 +370,8 @@ class PageAllocator:
         self._rc = [0] * n_pages
         self._scale_dirty: set = set()       # freed pages w/ stale scale rows
         self.total_allocated = 0             # pages ever handed out (stats)
+        self.pages_transferred_out = 0       # handed to another replica
+        self.pages_transferred_in = 0        # received from another replica
 
     @property
     def n_free(self) -> int:
@@ -472,3 +481,26 @@ class SlabAllocator:
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
     return -(-n_tokens // page_size)
+
+
+def handoff_refs(src_alloc: PageAllocator, src_pages,
+                 dst_alloc: PageAllocator, dst_pages):
+    """Atomically move ownership of a page run between replica allocators.
+
+    The destination side allocates fresh pages up front (``dst_pages``,
+    each refcount 1 — the device transfer copies payload bytes into them);
+    this bookkeeping step then drops the source slot's references exactly
+    once.  Source pages that the radix prefix cache (or another slot) still
+    shares simply lose one ref and stay resident on the source replica —
+    the handoff never frees a shared page out from under its sharers.
+    """
+    assert src_alloc is not dst_alloc, "handoff within one replica"
+    assert len(src_pages) == len(dst_pages), (src_pages, dst_pages)
+    for p in dst_pages:
+        assert dst_alloc.refcount(p) == 1, \
+            f"handoff into shared destination page {p} " \
+            f"(refcount {dst_alloc.refcount(p)}); destination pages must " \
+            f"be freshly allocated"
+    src_alloc.decref(src_pages)
+    src_alloc.pages_transferred_out += len(src_pages)
+    dst_alloc.pages_transferred_in += len(dst_pages)

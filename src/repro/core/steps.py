@@ -758,6 +758,78 @@ def make_page_copy_step(cfg, plan, mesh, n_pages: int, page_size: int,
     return fn, t, s
 
 
+def make_page_transfer_step(cfg, plan, mesh, n_pages: int, page_size: int,
+                            n_lanes: int, n_replicas: int = 1,
+                            n_slabs: int = 0):
+    """-> (transfer_fn(cache, src_rep, dst_rep, src_pages (n_lanes,),
+    dst_pages (n_lanes,)) -> cache, templates, specs).
+
+    First-class inter-replica page movement: gathers up to ``n_lanes``
+    pages (payload AND the int8 per-page scale rows — every leaf of the
+    self-KV pools rides along byte-identically) from the source replica's
+    pool and scatters them into freshly allocated destination pages.  One
+    compiled step covers every (src, dst) replica pair: the replica ids
+    are scalar *data*, shards that own neither replica route their writes
+    to the scratch page, and the gathered pages cross data shards through
+    a ledger-tracked psum (identity — zero wire bytes — when source and
+    destination live on the same shard, e.g. any 1-shard mesh).  Unused
+    lanes pass scratch→scratch.  Host-side refcount ownership moves
+    separately and atomically via ``kvcache.handoff_refs``.
+
+    The disaggregated-serving substrate: prefill replicas hand finished
+    KV page runs to decode replicas without re-running prefill.  Only the
+    self-KV pools transfer — SSM slabs and cross-KV pools are gated off
+    by the engine (attention-only models)."""
+    prepare_ledger(mesh)
+    _, cache_t, cache_s = _paged_templates(cfg, plan, mesh, n_pages,
+                                           page_size, n_replicas, n_slabs)
+    r_loc = n_replicas_local(mesh, plan, n_replicas)
+    sizes = mesh_axis_sizes(mesh)
+
+    def per_shard(cache, src_rep, dst_rep, src_pages, dst_pages):
+        shard = jnp.int32(0)
+        for a in plan.dp_axes:
+            if sizes.get(a, 1) > 1:
+                shard = shard * sizes[a] + jax.lax.axis_index(a)
+        base = shard * r_loc
+        local_src = src_rep - base
+        src_ok = (local_src >= 0) & (local_src < r_loc)
+        local_dst = dst_rep - base
+        dst_ok = (local_dst >= 0) & (local_dst < r_loc)
+
+        def leaf(pool):          # folded page axis is axis 1 on every leaf
+            pool = kvcache.fold_replica_pools(pool)
+            rows = jnp.clip(local_src, 0, r_loc - 1) * n_pages + src_pages
+            data = jnp.take(pool, rows, axis=1)
+            data = jnp.where(src_ok, data, jnp.zeros_like(data))
+            data = cc.psum(data, tuple(plan.dp_axes), "page_transfer")
+            dst_rows = jnp.where(
+                dst_ok,
+                jnp.clip(local_dst, 0, r_loc - 1) * n_pages + dst_pages,
+                0)               # non-owners write their scratch page
+            pool = pool.at[:, dst_rows].set(
+                jnp.where(dst_ok, data, jnp.take(pool, dst_rows, axis=1)))
+            return kvcache.unfold_replica_pools(pool, r_loc)
+        # only the self-KV pools: slab/cross ids live in other spaces
+        return [[{kind: (jax.tree_util.tree_map(leaf, sub)
+                         if kind == "kv" else sub)
+                  for kind, sub in d.items()} for d in pat]
+                for pat in cache]
+
+    s = {"cache": cache_s, "src_rep": P(), "dst_rep": P(),
+         "src_pages": P(None), "dst_pages": P(None)}
+    t = {"cache": cache_t,
+         "src_rep": jax.ShapeDtypeStruct((), jnp.int32),
+         "dst_rep": jax.ShapeDtypeStruct((), jnp.int32),
+         "src_pages": jax.ShapeDtypeStruct((n_lanes,), jnp.int32),
+         "dst_pages": jax.ShapeDtypeStruct((n_lanes,), jnp.int32)}
+    fn = _shard_map(per_shard, mesh,
+                    in_specs=(s["cache"], s["src_rep"], s["dst_rep"],
+                              s["src_pages"], s["dst_pages"]),
+                    out_specs=s["cache"])
+    return fn, t, s
+
+
 def make_cross_kv_write_step(cfg, plan, mesh, n_pages: int, page_size: int,
                              n_replicas: int = 1, n_slabs: int = 0):
     """-> (write_fn(params, cache, frames (R, S_enc, E), cross_bt

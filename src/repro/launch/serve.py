@@ -39,6 +39,16 @@ accepted-tokens/tick and the draft hit rate.
 scheduler; a router assigns requests by prefix affinity then page load,
 and the report splits stats per replica.  Replicas shard over the mesh's
 data axis when enough devices exist (they co-locate otherwise).
+
+``--disagg P:D`` (requires ``--dp`` with P + D replicas) disaggregates
+prefill from decode: P replicas chunk-prefill fresh requests and hand
+each finished KV page run to one of D decode replicas through the
+compiled page-transfer step, so long prefills never steal decode ticks
+(README §Disaggregated serving).  The paged engine plans one tick ahead
+by default (``--overlap``); ``--no-overlap`` restores the serial
+plan-dispatch-collect loop for debugging — outputs are token-identical
+either way, and the report adds the device-busy fraction plus plan-ahead
+/ invalidation counts.
 """
 from __future__ import annotations
 
@@ -68,6 +78,16 @@ def main(argv=None):
                     help="data-parallel replicas with replica-local page "
                          "pools and a prefix-affinity router (implies "
                          "--paged)")
+    ap.add_argument("--disagg", default=None, metavar="P:D",
+                    help="disaggregate prefill from decode: P prefill "
+                         "replicas hand finished page runs to D decode "
+                         "replicas via the compiled page-transfer step "
+                         "(requires --dp P+D)")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="plan tick t+1 while tick t's steps run on device "
+                         "(paged engine; --no-overlap restores the serial "
+                         "loop, token-identical either way)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--paged", action="store_true",
@@ -120,6 +140,16 @@ def main(argv=None):
         ap.error("--dp must be >= 1")
     if args.speculative < 0:
         ap.error("--speculative must be >= 0")
+    disagg = None
+    if args.disagg is not None:
+        try:
+            p, d = (int(x) for x in args.disagg.split(":"))
+        except ValueError:
+            ap.error("--disagg expects P:D (e.g. --disagg 1:1)")
+        if p < 1 or d < 1 or p + d != args.dp:
+            ap.error(f"--disagg {args.disagg} needs --dp {p + d} "
+                     f"(P + D replicas, both >= 1)")
+        disagg = (p, d)
 
     import jax
     from repro.configs import get_config, reduced
@@ -160,7 +190,8 @@ def main(argv=None):
             page_size=args.page_size, n_pages=args.n_pages,
             prefill_chunk=args.prefill_chunk, sampler=sampler,
             prefix_cache=args.prefix_cache, scheduler=scheduler,
-            rng_seed=args.seed, dp=args.dp, speculative=args.speculative)
+            rng_seed=args.seed, dp=args.dp, speculative=args.speculative,
+            overlap=args.overlap, disagg=disagg)
     else:
         dshape = ShapeConfig("serve", "decode", args.seq_budget, args.slots)
         pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
@@ -210,6 +241,16 @@ def main(argv=None):
               f"tpot_p50={np.median(stats.tpot_s) * 1e3:.1f}ms")
     else:
         print("no tokens emitted")
+    if engine.paged:
+        print(f"pipeline: overlap={'on' if engine.overlap else 'off'} "
+              f"device_busy_fraction={stats.device_busy_fraction:.2f} "
+              f"plan_ahead_ticks={stats.plan_ahead_ticks} "
+              f"plan_invalidations={stats.plan_invalidations} "
+              f"collect_wait={stats.collect_wait_s * 1e3:.1f}ms")
+    if disagg is not None:
+        print(f"disagg(P={disagg[0]} D={disagg[1]}): "
+              f"handoffs={stats.handoffs} "
+              f"pages_transferred={stats.pages_transferred}")
     if args.high_priority_every:
         for label, cls in (("high", 10), ("low", 0)):
             ts = [stats.request_ttft[r.rid] for r in reqs
@@ -250,13 +291,20 @@ def main(argv=None):
               f"/{args.requests}")
         for r, rs in enumerate(stats.replicas):
             alloc = engine.allocators[r]
+            handoff = ""
+            if disagg is not None:
+                handoff = (f" role={rs.role} "
+                           f"handoffs={rs.handoffs_out}out/"
+                           f"{rs.handoffs_in}in "
+                           f"pages_transferred={rs.pages_transferred_out}"
+                           f"out/{rs.pages_transferred_in}in")
             print(f"replica[{r}]: routed={rs.routed} "
                   f"prefills={rs.prefills} tokens={rs.decoded_tokens} "
                   f"preemptions={rs.preemptions} "
                   f"prefix_hit_rate={rs.prefix_hit_rate:.2f} "
                   f"pages_allocated={alloc.total_allocated} "
                   f"pages_free={alloc.n_free}/"
-                  f"{alloc.n_pages - alloc.n_reserved}")
+                  f"{alloc.n_pages - alloc.n_reserved}" + handoff)
     slowest = sorted(stats.request_ttft.items(), key=lambda kv: -kv[1])[:3]
     print("ttft_per_request_worst3: " +
           " ".join(f"rid{r}={t * 1e3:.1f}ms" for r, t in slowest))

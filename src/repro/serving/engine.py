@@ -89,10 +89,41 @@ drafts keep getting rejected stops drafting and returns the headroom pages
 (``Scheduler.on_spec_trim`` — a refcount trim, safe against pages shared
 with the prefix cache).
 
+**Pipelined execution** (paged engine; ``overlap=True``, the default):
+each tick splits into three phases — **plan** (host: preemption verdicts,
+admissions, COW/cross/handoff planning), **collect** (the tick's single
+barrier: one batched ``jax.device_get`` over every in-flight handle, then
+emissions / prefill completions / deferred preemptions), and **dispatch**
+(enqueue the tick's compiled steps and return without blocking).  In
+overlap mode the results of tick t's dispatch are consumed at tick t+1's
+collect, so the host plans tick t+1 while tick t's decode/prefill/verify
+calls run on device.  Correctness needs no device-side fences: every step
+threads (and donates) the cache value, so all device work serializes
+through its dependency chain, and host-side planning only ever touches
+pages no in-flight step references (frees happen at collect, before the
+following dispatch).  ``overlap=False`` collects in the same tick — the
+serial oracle.  Either way outputs are token-identical: admission/decode
+timing shifts are invisible to per-request RNG streams.  ``run()``,
+``drain()`` and ``preempt()`` barrier on in-flight work first, so
+conservation accounting and SSM stashes never race a dispatched step.
+
+**Disaggregated serving** (``disagg=(P, D)`` with ``dp == P + D``;
+attention-only archs): replicas split into P prefill-role and D
+decode-role.  The router admits fresh requests only on prefill replicas,
+which chunk-prefill the prompt, emit the first token, and queue the slot
+for handoff; the engine then moves the finished KV page run to the
+least-loaded decode replica through one compiled page-transfer step
+(``core.steps.make_page_transfer_step`` — int8 scale rows ride along
+byte-identically) while ``kvcache.handoff_refs`` moves refcount ownership
+atomically.  Decode replicas run pure token-per-tick (or verify) steps,
+so long prefills never stall another request's decode — the
+prefill/decode interference that dominates TTFT tails.
+
 Sampling is schedule-invariant: every request draws from its own seeded
 RNG stream (``Request.rng``), so non-greedy outputs do not depend on
-admission order, batch composition, replica routing, or preemption points
-— and speculative decoding preserves this per-request stream exactly.
+admission order, batch composition, replica routing, handoff placement,
+or preemption points — and speculative decoding preserves this
+per-request stream exactly.
 
 The engine is mesh-agnostic: it drives whatever step functions
 ``core.steps`` built — 1-device CPU smoke or a full pod.
@@ -105,8 +136,15 @@ Invariant: one compiled (chunk, decode, verify) step set serves every
 Enforced-by: analysis:jit-stability, analysis:traced-shape
 
 Invariant: the per-tick path reads device values only through the single
-    explicit jax.device_get per step — no hidden host syncs in run().
+    batched explicit jax.device_get per collect point — no hidden host
+    syncs in run().
 Enforced-by: analysis:host-sync
+
+Invariant: dispatch never blocks — between dispatching a tick's compiled
+    steps and the next plan phase the host performs no device barrier
+    (no jax.device_get / .block_until_ready() / .item() outside collect
+    points), so host planning genuinely overlaps device compute.
+Enforced-by: analysis:async-barrier
 
 Invariant: speculative headroom return is a refcount trim, never a
     free() — headroom pages may be shared with the radix prefix cache.
@@ -160,6 +198,7 @@ class Request:
 @dataclass
 class ReplicaStats:
     """Per-replica counters (``EngineStats.replicas[r]``)."""
+    role: str = "mixed"                # "prefill"/"decode" under --disagg
     routed: int = 0                    # requests the router assigned here
     prefills: int = 0
     decoded_tokens: int = 0
@@ -169,6 +208,10 @@ class ReplicaStats:
     cross_lookups: int = 0             # enc-dec frames-digest lookups
     cross_hits: int = 0
     spec_denied: int = 0               # admissions denied draft headroom
+    handoffs_out: int = 0              # finished page runs sent (prefill role)
+    handoffs_in: int = 0               # ... received (decode role)
+    pages_transferred_out: int = 0
+    pages_transferred_in: int = 0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -197,9 +240,24 @@ class EngineStats:
     spec_draft_lookups: int = 0        # draft-source queries
     spec_draft_hits: int = 0           # ... that produced a usable draft
     spec_denied: int = 0               # admissions denied draft headroom
+    handoffs: int = 0                  # prefill->decode page-run transfers
+    pages_transferred: int = 0         # pages moved across replicas
+    plan_ahead_ticks: int = 0          # plan phases run with work in flight
+    plan_invalidations: int = 0        # speculative plan entries rolled back
+    collect_wait_s: float = 0.0        # host time blocked at collect points
+    device_busy_s: float = 0.0         # dispatch->collect device intervals
+    tick_wall_s: float = 0.0           # total wall time inside tick()
     tpot_s: list = field(default_factory=list)
     request_ttft: dict = field(default_factory=dict)   # rid -> seconds
     replicas: List[ReplicaStats] = field(default_factory=list)
+
+    @property
+    def device_busy_fraction(self) -> float:
+        """Fraction of tick wall time with dispatched work in flight — an
+        overlap health proxy (dispatch-to-collect intervals over total tick
+        time; approximate, since the device may finish before collect)."""
+        return min(self.device_busy_s / self.tick_wall_s, 1.0) \
+            if self.tick_wall_s else 0.0
 
     @property
     def ttft_s(self) -> list:
@@ -237,7 +295,8 @@ class ServingEngine:
                  n_pages: int = 0, prefill_chunk: int = 0,
                  prefix_cache: bool = False, scheduler=None,
                  rng_seed: int = 0, dp: int = 1, n_slabs: int = 0,
-                 speculative: int = 0, verify_fn=None):
+                 speculative: int = 0, verify_fn=None,
+                 overlap: bool = True, disagg=None, transfer_fn=None):
         from repro.core import steps as _steps
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
         assert dp >= 1, dp
@@ -266,9 +325,31 @@ class ServingEngine:
         self.has_ssm = paged and "ssm" in prof
         self.has_cross = paged and "cross_kv" in prof
         # int8 page pools carry per-(page, slot) scale tensors whose rows
-        # must be invalidated when a page is recycled (see _admit_paged)
+        # must be invalidated when a page is recycled (see _plan_admissions)
         self.quant_pools = paged and kv_pool_is_quantized(plan) and \
             ("kv" in prof or "cross_kv" in prof)
+        self.overlap = bool(overlap) and paged
+        self.disagg = None
+        self.roles: Optional[List[str]] = None
+        if disagg is not None:
+            p_reps, d_reps = int(disagg[0]), int(disagg[1])
+            if not paged:
+                raise ValueError(
+                    "disaggregated serving requires the paged engine")
+            if p_reps < 1 or d_reps < 1 or p_reps + d_reps != dp:
+                raise ValueError(
+                    f"disagg {p_reps}:{d_reps} must cover every replica "
+                    f"with at least one of each role: need P >= 1, D >= 1 "
+                    f"and P + D == dp ({dp})")
+            if prof != {"kv"}:
+                raise ValueError(
+                    f"disaggregated serving is unsupported for arch "
+                    f"'{cfg.name}': the page-transfer step moves self-KV "
+                    f"page runs between replica pools (cache kinds "
+                    f"{sorted(prof)}) — SSM slabs and cross-KV pages do "
+                    f"not hand off")
+            self.disagg = (p_reps, d_reps)
+            self.roles = ["prefill"] * p_reps + ["decode"] * d_reps
         if paged:
             from repro.core.kvcache import paged_cache_supported
             ok, why = paged_cache_supported(cfg)
@@ -326,6 +407,12 @@ class ServingEngine:
                     cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
                     n_slabs=self.n_slabs if self.has_ssm else 0)
                 self.cross_write_fn = jax.jit(cross_fn, donate_argnums=(1,))
+            self.transfer_fn = transfer_fn
+            if self.disagg is not None and self.transfer_fn is None:
+                tfn, _, _ = _steps.make_page_transfer_step(
+                    cfg, plan, mesh, n_pages, page_size, self.n_max_pages,
+                    n_replicas=dp)
+                self.transfer_fn = jax.jit(tfn, donate_argnums=(0,))
         else:
             assert not prefix_cache, "prefix cache requires the paged engine"
             self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
@@ -362,6 +449,8 @@ class ServingEngine:
         sched = scheduler or FCFSScheduler
         if isinstance(sched, Scheduler):
             assert dp == 1, "dp>1 needs a scheduler factory, not an instance"
+            assert self.disagg is None, \
+                "disaggregation needs a scheduler factory, not an instance"
             self.scheds = [sched]
         else:
             self.scheds = [
@@ -377,19 +466,30 @@ class ServingEngine:
                                            if self.has_cross else 0),
                       kv_pages=not paged or "kv" in prof,
                       spec_tokens=self.speculative if paged else 0,
-                      stats=self.stats)
+                      stats=self.stats,
+                      **({"role": self.roles[r]}
+                         if self.roles is not None else {}))
                 for r in range(dp)]
         for r, s in enumerate(self.scheds):
             # per-replica counters update at the scheduler's single
             # counting site, alongside the global stats
             if getattr(s, "replica_stats", None) is None:
                 s.replica_stats = self.stats.replicas[r]
+        if self.roles is not None:
+            for r, ro in enumerate(self.roles):
+                self.stats.replicas[r].role = ro
         if paged:
             self.router = Router(self.scheds, self.allocators,
                                  self.prefix_caches, page_size,
-                                 cross_caches=self.cross_caches or None)
+                                 cross_caches=self.cross_caches or None,
+                                 roles=self.roles)
         self._rids: set = set()
         self.rng_seed = rng_seed
+        # pipelined execution state: results of the previous dispatch phase
+        # not yet consumed (None = nothing in flight), plus the FIFO of
+        # prefill-role slots whose finished page runs await a decode home
+        self._inflight: Optional[dict] = None
+        self._pending_handoffs: List[int] = []
 
     @classmethod
     def build_paged(cls, cfg, plan, mesh, batch_slots: int, seq_budget: int,
@@ -398,7 +498,8 @@ class ServingEngine:
                     sampler: Optional[SamplerConfig] = None,
                     prefix_cache: bool = False, scheduler=None,
                     rng_seed: int = 0, dp: int = 1, n_slabs: int = 0,
-                    speculative: int = 0):
+                    speculative: int = 0, overlap: bool = True,
+                    disagg=None):
         """Construct a paged engine, compiling its (chunk, decode) pair
         (plus the cross-KV write step for enc-dec archs, and the k+1-token
         verify step when ``speculative=k`` > 0).
@@ -441,7 +542,8 @@ class ServingEngine:
                    n_pages=n_pages, prefill_chunk=prefill_chunk,
                    prefix_cache=prefix_cache, scheduler=scheduler,
                    rng_seed=rng_seed, dp=dp, n_slabs=n_slabs,
-                   speculative=speculative, verify_fn=ver)
+                   speculative=speculative, verify_fn=ver,
+                   overlap=overlap, disagg=disagg)
 
     # ------------------------------------------------------------------ API
     @property
@@ -584,6 +686,20 @@ class ServingEngine:
                     f"request {req.rid}: frames shape "
                     f"{tuple(np.shape(req.frames))} != {want} expected by "
                     f"arch '{self.cfg.name}' (enc_seq_len, d_model)")
+        if self.disagg is not None:
+            # prefill-role admission budgets the prompt only; the request
+            # must still fit a decode replica's pool at handoff time
+            need = pages_needed(len(req.prompt) + req.max_new_tokens,
+                                self.page_size)
+            usable = max(self.allocators[rr].n_pages -
+                         self.allocators[rr].n_reserved
+                         for rr in range(self.R)
+                         if self.roles[rr] == "decode")
+            if need > usable:
+                raise RuntimeError(
+                    f"request {req.rid} needs {need} pages to decode but "
+                    f"the largest decode-replica pool has only {usable} "
+                    f"usable pages — it could prefill but never hand off")
         r = self.router.route(req) if self.router is not None else 0
         self.scheds[r].submit(req)    # raises on infeasible requests
         if self.router is not None:
@@ -603,7 +719,17 @@ class ServingEngine:
                any(a is not None for a in self.admissions)) and \
                 self.stats.ticks < max_ticks:
             self.tick()
+        # final barrier: collect any work still in flight (overlap mode
+        # after max_ticks exhaustion) so emitted tokens and retirements
+        # land before the caller inspects state or drains
+        self._barrier()
         return self.stats
+
+    def _barrier(self):
+        """Consume any in-flight dispatched work (no-op when idle); the
+        engine is fully synchronous afterwards."""
+        if self._inflight is not None:
+            self._collect_phase()
 
     def drain(self) -> int:
         """Abort every in-flight admission (e.g. after ``run`` exhausted
@@ -618,6 +744,7 @@ class ServingEngine:
         scratch (exact — admission plans cold and zeroes its slab)
         instead of restoring, so stash memory cannot outlive the work
         it was checkpointing."""
+        self._barrier()               # in-flight work settles before abort
         n = 0
         for b in range(self.B):
             adm = self.admissions[b]
@@ -641,6 +768,16 @@ class ServingEngine:
         same replica (routing is sticky) and the victim's KV is reused,
         not recomputed (only the partial tail page is re-prefilled)."""
         assert self.paged, "preemption requires the paged engine"
+        assert self.admissions[b] is not None, f"slot {b} is idle"
+        self._barrier()               # external preempt: settle first
+        if self.admissions[b] is None:
+            return                    # the slot retired at that collect point
+        self._preempt_now(b)
+
+    def _preempt_now(self, b: int):
+        """Immediate eviction — callers guarantee no in-flight dispatched
+        step references slot ``b``'s pages (either nothing is in flight,
+        or the in-flight results were just collected)."""
         adm = self.admissions[b]
         assert adm is not None, f"slot {b} is idle"
         n = int(self.prefill_done[b]) if self.slot_state[b] == "prefill" \
@@ -665,6 +802,8 @@ class ServingEngine:
         if self.paged:
             self.slot_state[b] = None
             self.prefill_done[b] = 0
+            if b in self._pending_handoffs:
+                self._pending_handoffs.remove(b)
 
     # ----------------------------------------------------------------- tick
     def tick(self):
@@ -758,29 +897,99 @@ class ServingEngine:
 
     # ------------------------------------------------------------ paged tick
     def _tick_paged(self):
+        """One pipelined tick: plan (host, overlaps in-flight device work),
+        collect (the tick's single barrier — consume the PREVIOUS tick's
+        dispatched results), apply deferred preemption verdicts, dispatch
+        this tick's compiled steps.  ``overlap=False`` collects the fresh
+        dispatch immediately — the serial oracle."""
+        t0 = time.monotonic()
+        tick_plan = self._plan_phase()
+        self._collect_phase()
+        self._run_deferred_preempts(tick_plan)
+        self._dispatch_phase(tick_plan)
+        if not self.overlap:
+            self._collect_phase()
+        self.stats.ticks += 1
+        self.stats.tick_wall_s += time.monotonic() - t0
+
+    def _rep_slots(self, r: int):
+        return range(r * self.Bp, (r + 1) * self.Bp)
+
+    # ------------------------------------------------------------ plan phase
+    def _plan_phase(self) -> dict:
+        """Host planning for this tick — runs while the previous tick's
+        dispatched work is still in flight.  Preemption verdicts against
+        slots with in-flight results are DEFERRED to after this tick's
+        collect point (their emissions may retire the victim first —
+        ``plan_invalidations``); with nothing in flight they apply
+        immediately, matching the serial engine exactly.  The only device
+        work enqueued here (slab zero/restore, scale-row resets) rides the
+        cache value's dependency chain, so it serializes after the
+        in-flight step without any host sync."""
+        tick_plan = {"preempts": [], "handoffs": [], "cow": [], "cross": []}
+        if self._inflight is not None:
+            self.stats.plan_ahead_ticks += 1
         for r in range(self.R):
             active = [self.admissions[b] for b in self._rep_slots(r)
                       if self.admissions[b] is not None]
             for adm in self.scheds[r].plan_preemptions(
                     active, self.Bp - len(active)):
-                self.preempt(self._gslot(r, adm.slot))
-        self._admit_paged()
-        self._prefill_tick_paged()
-        self._decode_tick_paged()
-        self.stats.ticks += 1
+                b = self._gslot(r, adm.slot)
+                if self._inflight is None:
+                    self._preempt_now(b)
+                else:
+                    tick_plan["preempts"].append((b, adm.req.rid))
+        if self.disagg is not None:
+            self._plan_handoffs(tick_plan)
+        self._plan_admissions(tick_plan)
+        return tick_plan
 
-    def _rep_slots(self, r: int):
-        return range(r * self.Bp, (r + 1) * self.Bp)
+    def _plan_handoffs(self, tick_plan: dict):
+        """Match pending finished-prefill slots (FIFO) to decode replicas
+        with a free slot.  The destination slot is claimed NOW — this
+        tick's admission planning must see it occupied — but the transfer
+        itself (and the source release) happens at dispatch; a deferred
+        preemption landing on the source first rolls the claim back."""
+        deferred = {b for b, _ in tick_plan["preempts"]}
+        while self._pending_handoffs:
+            b_src = self._pending_handoffs[0]
+            if b_src in deferred:
+                break           # source being evicted at this collect point
+            src_adm = self.admissions[b_src]
+            cand = [r for r in range(self.R)
+                    if self.roles[r] == "decode"
+                    and any(self.admissions[b] is None
+                            for b in self._rep_slots(r))]
+            if not cand:
+                break
+            dst_r = self.router.decode_placement(cand)
+            local = min(b - dst_r * self.Bp for b in self._rep_slots(dst_r)
+                        if self.admissions[b] is None)
+            resident = int(self.pos[b_src])
+            dst_adm = self.scheds[dst_r].plan_handoff(local, src_adm.req,
+                                                      resident)
+            if dst_adm is None:
+                break           # destination pool pressure: head waits
+            b_dst = self._gslot(dst_r, dst_adm.slot)
+            self.admissions[b_dst] = dst_adm
+            self.slot_state[b_dst] = "decode"
+            self.pos[b_dst] = resident
+            self.prefill_done[b_dst] = resident
+            self.last_token[b_dst] = src_adm.req.out_tokens[-1]
+            self.spec_miss[b_dst] = 0
+            self._pending_handoffs.pop(0)
+            tick_plan["handoffs"].append(
+                (b_src, src_adm, dst_r, b_dst, dst_adm))
 
-    def _admit_paged(self):
-        """Execute this tick's admissions, per replica.  COW page copies
-        and cross-KV encodes are batched across replicas: each compiled
-        call carries one unit of work per replica (identity/scratch rows
-        for replicas with nothing to do).  SSM-arch slots get their slab
+    def _plan_admissions(self, tick_plan: dict):
+        """Install this tick's admissions, per replica, and assemble the
+        COW / cross-KV rounds the dispatch phase will execute.  Each round
+        batches one unit of work per replica (identity/scratch rows for
+        replicas with nothing to do).  SSM-arch slots get their slab
         zeroed — or, for a preempted request, restored from its host-side
         stash, resuming prefill at the checkpointed token."""
-        cow_rounds: List[List[Optional[Admission]]] = []
-        cross_rounds: List[List[Optional[Admission]]] = []
+        cow_rounds: List[List[Optional[Admission]]] = tick_plan["cow"]
+        cross_rounds: List[List[Optional[Admission]]] = tick_plan["cross"]
         for r in range(self.R):
             free = [b - r * self.Bp for b in self._rep_slots(r)
                     if self.admissions[b] is None]
@@ -818,7 +1027,118 @@ class ServingEngine:
                 dirty = self.allocators[r].take_scale_dirty()
                 if dirty:
                     self._reset_scale_rows(r, dirty)
-        for round_ in cross_rounds:
+
+    # --------------------------------------------------------- collect phase
+    def _collect_phase(self):
+        """The tick's single barrier point: one batched ``jax.device_get``
+        over every in-flight handle, then host-side consumption in
+        dispatch order — prefill completions (first-token emission, state
+        flip to decode or the handoff queue) before decode/verify
+        emissions.  Slots evicted or retired since dispatch are skipped by
+        (slot, rid) guard, so a cancelled request's RNG stream is never
+        advanced."""
+        inf = self._inflight
+        if inf is None:
+            return
+        self._inflight = None
+        t0 = time.monotonic()
+        handles = [h for h, comps in inf["pf"] if comps]
+        step = inf["step"]
+        if step is not None:
+            handles.append(step[1])
+        vals = jax.device_get(handles) if handles else []
+        t1 = time.monotonic()
+        self.stats.collect_wait_s += t1 - t0
+        self.stats.device_busy_s += t1 - inf["t_dispatch"]
+        vi = 0
+        for _, comps in inf["pf"]:
+            if not comps:
+                continue
+            logits_np = np.asarray(vals[vi]).astype(np.float32)
+            vi += 1
+            for r, b, rid, L in comps:
+                adm = self.admissions[b]
+                if adm is None or adm.req.rid != rid:
+                    continue           # evicted since dispatch
+                req = adm.req
+                self.stats.prefills += 1
+                self.stats.replicas[r].prefills += 1
+                self.scheds[r].on_prefill_complete(adm)
+                # emit the token sampled from the final prompt position —
+                # the first generated token (or, on resume, the next one:
+                # resumed requests re-enter with out_tokens non-empty, so
+                # TTFT is not re-recorded)
+                self.pos[b] = L
+                self._emit(b, req, self._sample_row(logits_np, r, req),
+                           time.monotonic())
+                if self.admissions[b] is None:
+                    continue           # retired by that token
+                if self.roles is not None and self.roles[r] == "prefill":
+                    # prefill-role replicas never decode: queue the slot's
+                    # finished page run for transfer to a decode replica
+                    self.slot_state[b] = "handoff"
+                    self._pending_handoffs.append(b)
+                else:
+                    self.slot_state[b] = "decode"
+        if step is None:
+            return
+        logits = np.asarray(vals[vi]).astype(np.float32)
+        now = time.monotonic()
+        if step[0] == "decode":
+            for b, rid in step[2]:
+                adm = self.admissions[b]
+                if adm is None or adm.req.rid != rid:
+                    continue
+                self.pos[b] += 1    # the decode step wrote last_token's KV
+                self._emit(b, adm.req, self._sample_row(logits, b, adm.req),
+                           now)
+        else:                        # verify
+            drafts = step[3]
+            for b, rid in step[2]:
+                adm = self.admissions[b]
+                if adm is None or adm.req.rid != rid:
+                    continue
+                req = adm.req
+                d = drafts.get(b, [])
+                out = speculative_sample(logits[b, :len(d) + 1], d,
+                                         self.sampler, self.cfg.vocab_size,
+                                         req.rng)
+                emitted = 0
+                for tok in out:
+                    self.pos[b] += 1    # verify wrote this position's KV
+                    self._emit(b, req, tok, now)
+                    emitted += 1
+                    if self.admissions[b] is None:
+                        break           # retired mid-accept: drop the tail
+                if d:
+                    self.stats.spec_steps += 1
+                    self.stats.spec_drafted += len(d)
+                    self.stats.spec_accepted += emitted - 1
+                    self.stats.spec_emitted += emitted
+                    if self.admissions[b] is not None:  # retired slots reset
+                        self.spec_miss[b] = 0 if emitted > 1 \
+                            else self.spec_miss[b] + 1
+
+    def _run_deferred_preempts(self, tick_plan: dict):
+        """Apply preemption verdicts deferred past the collect point.  A
+        victim that retired (or handed off) at collect is simply skipped —
+        no release fires twice (``plan_invalidations`` counts the miss)."""
+        for b, rid in tick_plan["preempts"]:
+            adm = self.admissions[b]
+            if adm is None or adm.req.rid != rid:
+                self.stats.plan_invalidations += 1
+                continue
+            self._preempt_now(b)
+
+    # -------------------------------------------------------- dispatch phase
+    def _dispatch_phase(self, tick_plan: dict):
+        """Enqueue this tick's compiled steps and return without blocking:
+        page-run handoffs first (freshly claimed decode slots join this
+        tick's decode batch), then cross-KV encodes, COW copies, prefill
+        chunk rounds, and the decode-or-verify step.  Result handles land
+        in ``self._inflight`` for the next collect point."""
+        self._dispatch_handoffs(tick_plan)
+        for round_ in tick_plan["cross"]:
             frames = np.zeros((self.R, self.cfg.enc_seq_len,
                                self.cfg.d_model), np.float32)
             cbt = np.full((self.R, self.n_cross_pages), SCRATCH_PAGE,
@@ -836,7 +1156,7 @@ class ServingEngine:
                 if adm is not None:
                     self.scheds[r].on_cross_written(adm)
                     self.stats.cross_encodes += 1
-        for round_ in cow_rounds:
+        for round_ in tick_plan["cow"]:
             src = np.full(self.R, SCRATCH_PAGE, np.int32)
             dst = np.full(self.R, SCRATCH_PAGE, np.int32)   # src==dst: no-op
             for r, adm in enumerate(round_):
@@ -849,6 +1169,49 @@ class ServingEngine:
                 if adm is not None:
                     self.scheds[r].on_cow_done(adm)
                     self.stats.cow_copies += 1
+        pf = self._dispatch_prefill()
+        step = self._dispatch_step()
+        if pf or step is not None:
+            self._inflight = {"pf": pf, "step": step,
+                              "t_dispatch": time.monotonic()}
+
+    def _dispatch_handoffs(self, tick_plan: dict):
+        """Execute the planned page-run transfers: one compiled gather →
+        all-reduce → scatter step per handoff moves the source slot's
+        resident pages (int8 scale rows included) into the destination
+        replica's freshly allocated pages, then ``on_handoff_sent`` moves
+        the refcounts atomically and the source slot clears.  A plan
+        invalidated at collect (source evicted) rolls the destination
+        claim back instead."""
+        for b_src, src_adm, dst_r, b_dst, dst_adm in tick_plan["handoffs"]:
+            if self.admissions[b_src] is not src_adm:
+                self.scheds[dst_r].on_finish(dst_adm)
+                self._clear_slot(b_dst)
+                self.stats.plan_invalidations += 1
+                continue
+            req = src_adm.req
+            src_r = self._rep(b_src)
+            k = len(src_adm.pages)
+            src_pages = np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
+            dst_pages = np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
+            src_pages[:k] = src_adm.pages
+            dst_pages[:k] = dst_adm.pages[:k]
+            with self.mesh:
+                self.cache = self.transfer_fn(
+                    self.cache, jnp.int32(src_r), jnp.int32(dst_r),
+                    jnp.asarray(src_pages), jnp.asarray(dst_pages))
+            self.scheds[src_r].on_handoff_sent(
+                src_adm, self.allocators[dst_r], dst_adm.pages[:k])
+            self._clear_slot(b_src)
+            req.replica = dst_r
+            self.stats.handoffs += 1
+            self.stats.pages_transferred += k
+            rs = self.stats.replicas[src_r]
+            rd = self.stats.replicas[dst_r]
+            rs.handoffs_out += 1
+            rd.handoffs_in += 1
+            rs.pages_transferred_out += k
+            rd.pages_transferred_in += k
 
     def _bt_row(self, b: int) -> np.ndarray:
         row = np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
@@ -869,22 +1232,29 @@ class ServingEngine:
         return adm.slab if (active and adm is not None
                             and adm.slab is not None) else SCRATCH_SLAB
 
-    def _prefill_tick_paged(self):
+    def _dispatch_prefill(self):
         """Advance every prefilling slot by one chunk.  Slots are batched
         across replicas: compiled chunk call k covers each replica's k-th
         prefilling slot (replicas with fewer ride along as scratch-page
-        no-ops), so the dp mesh prefills all replicas in parallel."""
+        no-ops), so the dp mesh prefills all replicas in parallel.
+        -> list of (logits handle, completions) per round, consumed at the
+        next collect point."""
         per_rep = [[b for b in self._rep_slots(r)
                     if self.admissions[b] is not None
                     and self.slot_state[b] == "prefill"]
                    for r in range(self.R)]
+        rounds = []
         for k in range(max((len(s) for s in per_rep), default=0)):
             rows = [s[k] if k < len(s) else None for s in per_rep]
-            self._prefill_chunk_round(rows)
+            rounds.append(self._prefill_chunk_round(rows))
+        return rounds
 
     def _prefill_chunk_round(self, rows: List[Optional[int]]):
         """One compiled chunk call: row r advances slot ``rows[r]`` (or is
-        a scratch no-op when None)."""
+        a scratch no-op when None).  Host bookkeeping (``prefill_done``)
+        advances now; -> (logits handle, [(r, b, rid, prompt_len)] for
+        rows whose prompt is now fully resident) — sampling waits for the
+        collect point."""
         C = self.chunk
         toks = np.zeros((self.R, C), np.int32)
         starts = np.zeros(self.R, np.int32)
@@ -917,39 +1287,28 @@ class ServingEngine:
             args.append(jnp.asarray(cbt))
         with self.mesh:
             logits, self.cache = self.prefill_fn(*args)
-        logits_np = None
+        comps = []
         for r, (b, req, prompt) in prompts.items():
             L = len(prompt)
             self.prefill_done[b] = int(starts[r]) + C
-            if int(starts[r]) + C < L:
-                continue                     # more chunks to go
-            # prompt fully resident
-            if logits_np is None:
-                logits_np = np.asarray(
-                    jax.device_get(logits)).astype(np.float32)
-            self.stats.prefills += 1
-            self.stats.replicas[r].prefills += 1
-            self.scheds[r].on_prefill_complete(self.admissions[b])
-            # emit the token sampled from the final prompt position — the
-            # first generated token (or, on resume, the next one: resumed
-            # requests re-enter here with out_tokens non-empty, so TTFT is
-            # not re-recorded)
-            self.pos[b] = L
-            self._emit(b, req, self._sample_row(logits_np, r, req),
-                       time.monotonic())
-            if self.admissions[b] is not None:   # not retired by that token
-                self.slot_state[b] = "decode"
+            if int(starts[r]) + C >= L:      # prompt fully resident
+                comps.append((r, b, req.rid, L))
+        return logits, comps
 
-    def _decode_tick_paged(self):
+    def _dispatch_step(self):
+        """Dispatch the tick's decode-or-verify step over every
+        decode-state slot.  -> ("decode", logits handle, [(b, rid)]) or
+        ("verify", logits handle, [(b, rid)], drafts) or None; emissions
+        happen at the next collect point."""
         active = [b for b in range(self.B)
                   if self.admissions[b] is not None
                   and self.slot_state[b] == "decode"]
         if not active:
-            return
+            return None
         if self.speculative:
             drafts = self._plan_drafts(active)
             if drafts is not None:
-                return self._verify_tick_paged(active, drafts)
+                return self._dispatch_verify(active, drafts)
             # every draft came back empty (cold cache / no repeats):
             # fall through to the plain one-token step — identical to
             # running with speculation off
@@ -975,12 +1334,8 @@ class ServingEngine:
             args.append(jnp.asarray(cbt))
         with self.mesh:
             logits, self.cache = self.decode_fn(*args)
-        logits = np.asarray(jax.device_get(logits)).astype(np.float32)
-        now = time.monotonic()
-        for b in active:
-            req = self.admissions[b].req
-            self.pos[b] += 1        # the decode step wrote last_token's KV
-            self._emit(b, req, self._sample_row(logits, b, req), now)
+        return ("decode", logits,
+                [(b, self.admissions[b].req.rid) for b in active])
 
     # ---------------------------------------------------- speculative decode
     def _plan_drafts(self, active: List[int]):
@@ -1019,10 +1374,11 @@ class ServingEngine:
             drafts[b] = [int(t) for t in draft[:kd]]
         return drafts or None
 
-    def _verify_tick_paged(self, active: List[int], drafts: dict):
+    def _dispatch_verify(self, active: List[int], drafts: dict):
         """One fused verify step scores k+1 positions for every active
         slot (draftless slots ride along as qlen=1 plain decode rows);
-        rejection sampling then emits 1..kd+1 tokens per slot.
+        rejection sampling at the collect point then emits 1..kd+1 tokens
+        per slot.
 
         Rollback of rejected-draft KV is pure host bookkeeping: ``pos``
         advances only past emitted tokens, per-query validity masks
@@ -1045,29 +1401,8 @@ class ServingEngine:
             logits, self.cache = self.verify_fn(
                 self.params, self.cache, jnp.asarray(toks),
                 jnp.asarray(pos), jnp.asarray(qlen), jnp.asarray(bt))
-        logits = np.asarray(jax.device_get(logits)).astype(np.float32)
-        now = time.monotonic()
-        for b in active:
-            req = self.admissions[b].req
-            d = drafts.get(b, [])
-            out = speculative_sample(logits[b, :len(d) + 1], d,
-                                     self.sampler, self.cfg.vocab_size,
-                                     req.rng)
-            emitted = 0
-            for tok in out:
-                self.pos[b] += 1    # verify wrote this position's KV
-                self._emit(b, req, tok, now)
-                emitted += 1
-                if self.admissions[b] is None:
-                    break           # retired mid-accept: drop the tail
-            if d:
-                self.stats.spec_steps += 1
-                self.stats.spec_drafted += len(d)
-                self.stats.spec_accepted += emitted - 1
-                self.stats.spec_emitted += emitted
-                if self.admissions[b] is not None:   # retired slots reset
-                    self.spec_miss[b] = 0 if emitted > 1 \
-                        else self.spec_miss[b] + 1
+        return ("verify", logits,
+                [(b, self.admissions[b].req.rid) for b in active], drafts)
 
 
 def _splice_cache(big, lane, b):

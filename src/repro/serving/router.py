@@ -39,6 +39,13 @@ Invariant: routing pins nothing — affinity lookups take no page refs
     (``RadixPrefixCache.lookup`` is read-only apart from its LRU clock),
     so routing can never pin or leak pages.
 Enforced-by: tests/test_dp_serving.py::test_router_prefix_affinity_wins, analysis:refcount-leak
+
+Invariant: role-aware placement — under disaggregation (``roles`` set)
+    fresh requests are admitted only on prefill-role replicas, and
+    ``decode_placement`` hands finished page runs only to decode-role
+    replicas; neither set is ever empty and a request crosses the
+    boundary exactly once, via the page-transfer handoff.
+Enforced-by: tests/test_page_transfer.py::test_disagg_dp2_matches_serial_dp1_greedy
 """
 from __future__ import annotations
 
@@ -55,7 +62,8 @@ class Router:
 
     def __init__(self, scheds: List, allocators: List,
                  prefix_caches: List[Optional[object]], page_size: int,
-                 recent_window: int = 32, cross_caches=None):
+                 recent_window: int = 32, cross_caches=None,
+                 roles: Optional[List[str]] = None):
         assert len(scheds) == len(allocators) == len(prefix_caches)
         self.scheds = scheds
         self.allocators = allocators
@@ -63,6 +71,16 @@ class Router:
         self.cross_caches = cross_caches or [None] * len(scheds)
         self.psz = page_size
         self.n_replicas = len(scheds)
+        # disaggregation: per-replica roles ("prefill" / "decode"); None
+        # means every replica serves both phases (the interleaved engine)
+        self.roles = roles
+        if roles is not None:
+            assert len(roles) == len(scheds)
+            self._admit_set = [r for r, ro in enumerate(roles)
+                               if ro == "prefill"]
+            assert self._admit_set and len(self._admit_set) < len(scheds)
+        else:
+            self._admit_set = list(range(self.n_replicas))
         self.affinity_routed = 0       # requests placed by prefix affinity
         # prompts recently routed per replica: speculative affinity for
         # bursts whose shared prefix hasn't finished prefilling anywhere yet
@@ -122,14 +140,24 @@ class Router:
         call ``commit`` once the replica's scheduler accepted it."""
         if self.n_replicas == 1:
             return 0
+        admit = self._admit_set
+        if len(admit) == 1:
+            return admit[0]
         hits = self.affinity(req)
-        best = max(hits)
+        best = max(hits[r] for r in admit)
         if best >= self.psz:           # at least one full page reusable
-            cand = [r for r in range(self.n_replicas) if hits[r] == best]
+            cand = [r for r in admit if hits[r] == best]
             self.affinity_routed += 1
         else:
-            cand = list(range(self.n_replicas))
+            cand = list(admit)
         return min(cand, key=lambda rr: (self.page_load(rr), rr))
+
+    def decode_placement(self, candidates: List[int]) -> int:
+        """Pick the decode replica to receive a finished page run: least
+        page load, index tiebreak (the same deterministic rule as cold
+        routing).  ``candidates`` is the engine's per-tick set of
+        decode-role replicas that still have a free slot."""
+        return min(candidates, key=lambda rr: (self.page_load(rr), rr))
 
     def commit(self, req, r: int) -> None:
         """Record a successful placement: ``req``'s prompt (and frames

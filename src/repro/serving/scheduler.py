@@ -44,10 +44,28 @@ Beyond attention-only archs, admission is a JOINT all-or-nothing budget:
   cross-KV write step once; ``on_cross_written`` then publishes the pages
   for later identical-frame requests.
 
+Disaggregated serving (``--disagg P:D``) assigns each replica's scheduler
+a **role**: a ``prefill`` replica budgets only the resident-prompt page
+run (the slot leaves at first token, so no decode-horizon pages are
+reserved) and skips draft headroom; a ``decode`` replica plans like
+``mixed`` but is fed by ``plan_handoff`` — the destination half of a page
+handoff, which allocates a fresh run covering resident + remaining-decode
+tokens.  ``on_handoff_sent`` then moves ownership atomically
+(``kvcache.handoff_refs``).  A decode replica's own queue is populated
+only by preemption requeues; it re-admits them through the ordinary
+prefix-hit path over the pages the preemption donated.
+
 Invariant: leak freedom — every page is either free, radix-cached, or
     cross-cached, and every slab is free, after ``run()``/``drain()``
     retire all admissions (asserted by tests at drain).
 Enforced-by: tests/test_scheduling.py::test_drain_releases_stranded_pages, analysis:refcount-leak
+
+Invariant: role budgeting conserves the pool — a prefill-role admission
+    holds exactly the resident-prompt page run, and a handoff moves those
+    references to freshly allocated destination pages exactly once, so
+    per-replica leak freedom survives any interleaving of handoffs and
+    preemptions.
+Enforced-by: tests/test_page_transfer.py::test_handoff_preemption_mid_transfer, analysis:refcount-leak
 """
 from __future__ import annotations
 
@@ -57,7 +75,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.kvcache import pages_needed
+from repro.core.kvcache import handoff_refs, pages_needed
 
 
 def effective_prompt(req) -> np.ndarray:
@@ -157,6 +175,19 @@ class Scheduler:
         headroom pages past block-table index ``keep``; default: no-op
         (the contiguous engine holds no pages)."""
 
+    def plan_handoff(self, slot: int, req,
+                     resident_len: int) -> Optional[Admission]:
+        """Destination-side admission for an incoming page handoff
+        (disaggregated serving); default: refuse, the handoff stays
+        queued at the source replica."""
+        return None
+
+    def on_handoff_sent(self, adm: Admission, dst_allocator,
+                        dst_pages) -> None:
+        """adm's resident pages were transferred to another replica —
+        move reference ownership and retire the source slot."""
+        raise NotImplementedError
+
 
 class FCFSScheduler(Scheduler):
     """First-come-first-served admission (the seed engine's policy).
@@ -171,9 +202,16 @@ class FCFSScheduler(Scheduler):
     def __init__(self, *, seq_budget: int, allocator=None, page_size: int = 0,
                  prefix_cache=None, stats=None, slab_allocator=None,
                  cross_cache=None, cross_pages_per_req: int = 0,
-                 kv_pages: bool = True, spec_tokens: int = 0):
+                 kv_pages: bool = True, spec_tokens: int = 0,
+                 role: str = "mixed"):
+        assert role in ("mixed", "prefill", "decode"), role
         self.queue: collections.deque = collections.deque()
         self.seq_budget = seq_budget
+        # disaggregation role: "prefill" budgets only the resident-prompt
+        # page run (the slot hands off at first token) and never reserves
+        # draft headroom; "decode" plans like "mixed" (the marker is for
+        # the router's placement)
+        self.role = role
         self.allocator = allocator
         self.psz = page_size
         self.prefix_cache = prefix_cache
@@ -234,9 +272,7 @@ class FCFSScheduler(Scheduler):
                     f"request {req.rid} needs {len(req.prompt)} prompt + "
                     f"{req.max_new_tokens} new tokens; the sequence budget "
                     f"is {self.seq_budget}")
-            need = (pages_needed(len(req.prompt) + req.max_new_tokens,
-                                 self.psz) if self.kv_pages else 0) \
-                + self.cross_pages_per_req
+            need = self._req_pages(req)
             usable = self.allocator.n_pages - self.allocator.n_reserved
             if need > usable:       # reject now, not mid-run at admission
                 raise RuntimeError(
@@ -265,9 +301,11 @@ class FCFSScheduler(Scheduler):
         and requeues."""
         if not self.paged:
             return 0
-        return (pages_needed(len(effective_prompt(req)) +
-                             remaining_new_tokens(req), self.psz)
-                if self.kv_pages else 0) + self.cross_pages_per_req
+        n = len(effective_prompt(req))
+        if self.role != "prefill":      # prefill slots leave at first token
+            n += remaining_new_tokens(req)
+        return (pages_needed(n, self.psz) if self.kv_pages else 0) \
+            + self.cross_pages_per_req
 
     def _evictable_pages(self) -> int:
         """Pages eviction could eventually reclaim across both caches."""
@@ -332,8 +370,9 @@ class FCFSScheduler(Scheduler):
     def _plan_paged(self, slot: int, req) -> Optional[Admission]:
         prompt = effective_prompt(req)
         L = len(prompt)
-        total = pages_needed(L + remaining_new_tokens(req), self.psz) \
-            if self.kv_pages else 0
+        horizon = L if self.role == "prefill" \
+            else L + remaining_new_tokens(req)
+        total = pages_needed(horizon, self.psz) if self.kv_pages else 0
         alloc = self.allocator
         # ---- recurrent-state slab (SSM/hybrid): all-or-nothing with pages
         slab = None
@@ -413,7 +452,8 @@ class FCFSScheduler(Scheduler):
         # still admitted, just without speculation (adm.spec=False), and no
         # cache eviction runs — hot resident prefixes outrank draft room.
         spec, spec_pages = False, []
-        if self.spec_tokens > 0 and self.kv_pages:
+        if self.spec_tokens > 0 and self.kv_pages \
+                and self.role != "prefill":
             n_max = self.seq_budget // self.psz
             extra = min(pages_needed(L + remaining_new_tokens(req) +
                                      self.spec_tokens, self.psz),
@@ -511,3 +551,54 @@ class FCFSScheduler(Scheduler):
             self._release(adm)
         self._requeue_preempted(adm.req)
         self.backlog_pages += self._req_pages(adm.req)
+
+    # ------------------------------------------------------ disaggregation
+    def plan_handoff(self, slot: int, req,
+                     resident_len: int) -> Optional[Admission]:
+        """Destination-side admission for an incoming page handoff: the
+        request arrives with ``resident_len`` tokens of KV already computed
+        on the source replica, so this allocates a fresh run covering
+        resident + remaining-decode tokens (the device transfer step fills
+        the resident prefix; reference ownership moves separately via
+        ``on_handoff_sent`` → ``kvcache.handoff_refs``).  All-or-nothing
+        like ``_plan_paged``: returning None leaves the handoff queued at
+        the source.  Draft headroom is budgeted opportunistically, exactly
+        as at a cold admission."""
+        total = pages_needed(resident_len + remaining_new_tokens(req),
+                             self.psz)
+        alloc = self.allocator
+        fresh = alloc.alloc(total)
+        if fresh is None and self._can_reclaim(total):
+            self._reclaim(total - alloc.n_free)
+            fresh = alloc.alloc(total)
+        if fresh is None:
+            return None
+        spec, spec_pages = False, []
+        if self.spec_tokens > 0:
+            n_max = self.seq_budget // self.psz
+            extra = min(pages_needed(resident_len +
+                                     remaining_new_tokens(req) +
+                                     self.spec_tokens, self.psz),
+                        n_max) - total
+            spec_pages = alloc.alloc(extra)
+            if spec_pages is None:
+                spec_pages = []
+                for st in (self.stats, self.replica_stats):
+                    if st is not None:
+                        st.spec_denied += 1
+            else:
+                spec = True
+        adm = Admission(slot=slot, req=req, pages=fresh + spec_pages,
+                        cached_len=resident_len, spec=spec)
+        adm.seq = self._adm_seq
+        self._adm_seq += 1
+        return adm
+
+    def on_handoff_sent(self, adm: Admission, dst_allocator,
+                        dst_pages) -> None:
+        """The engine transferred adm's resident pages to another replica:
+        move reference ownership atomically (the source refs drop exactly
+        once; pages the radix cache shares stay resident here).  Prefill
+        admissions hold no slab or cross pages — disaggregation is gated
+        to attention-only archs — so the page refs are the whole estate."""
+        handoff_refs(self.allocator, adm.pages, dst_allocator, dst_pages)

@@ -167,6 +167,45 @@ def test_item_in_tick_loop_detected():
     assert ".item()" in hot[0].snippet
 
 
+ASYNCY = """
+class ServingEngine:
+    def tick(self):
+        plan = self._plan_phase()
+        self._collect_phase()
+        self._dispatch_phase(plan)
+
+    def _plan_phase(self):
+        budget = int(self.headroom.item())     # barrier while step in flight
+        return self._plan_admissions(budget)
+
+    def _plan_admissions(self, budget):
+        jax.device_get(self.pos)               # reachable from plan: barrier
+        return budget
+
+    def _dispatch_phase(self, plan):
+        logits, self.cache = self.decode_fn(self.params, self.cache)
+        logits.block_until_ready()             # serializes the pipeline
+        self._inflight = logits
+
+    def _collect_phase(self):
+        if self._inflight is not None:
+            toks = jax.device_get(self._inflight)  # the one legal barrier
+            self.emit(toks)
+"""
+
+
+def test_async_barrier_in_plan_dispatch_detected():
+    findings = trace.scan_source(_src(trace.ENGINE_PATH, ASYNCY))
+    hot = [f for f in findings if f.rule == "async-barrier"]
+    # .item() in _plan_phase, device_get in the transitively reached
+    # _plan_admissions, block_until_ready in _dispatch_phase — and NOT
+    # the device_get at the collect point
+    assert {f.scope for f in hot} == {"ServingEngine._plan_phase",
+                                      "ServingEngine._plan_admissions",
+                                      "ServingEngine._dispatch_phase"}
+    assert len(hot) == 3
+
+
 def test_traced_shape_and_missing_donation_detected():
     import textwrap
     src = _src(trace.ENGINE_PATH, textwrap.dedent("""
