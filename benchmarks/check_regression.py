@@ -27,6 +27,8 @@ METRICS = {
     "cpu_us_per_call": -1,    # kernels bench (BENCH_kernels.json rows)
     "accepted_tokens_per_tick": +1,   # speculative-decoding scenario
     "ttft_p99_ms_burst": -1,  # disaggregated-serving scenario headline
+    "recovered_throughput_ratio": +1,  # elastic scenario: post-crash recovery
+    "ttft_p99_ms_event": -1,  # elastic scenario: arrivals landing post-crash
 }
 
 

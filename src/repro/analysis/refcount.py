@@ -13,7 +13,12 @@ site honest (scanned: ``core/kvcache.py``, ``serving/``,
   rollback/exception arms count) or an *escape* (``x`` is returned, stored
   into an attribute/container, or passed to another call — i.e. the ref's
   ownership moves to a live structure that releases it later, e.g. an
-  ``Admission`` record or the radix tree).  A ref that neither escapes nor
+  ``Admission`` record or the radix tree).  ``kvcache.handoff_refs`` is a
+  recognized RELEASE, not a mere escape: it drops the source allocator's
+  ref per page as the atomic cross-replica ownership move (disagg
+  handoffs, drain-time migrations); host-spill writes
+  (``HostSpillStore.put_prefix``/``put_cross``) copy payload bytes and
+  take no refs, so they fall under ordinary escape handling.  A ref that neither escapes nor
   is released is unreachable and leaks its pages.  The analysis is
   intraprocedural and line-insensitive by design: it never false-positives
   on the scheduler's rollback arms, at the cost of trusting that an
@@ -40,6 +45,9 @@ TARGETS = ["src/repro/core/kvcache.py", "src/repro/serving",
            "src/repro/core/steps.py"]
 ALLOCATOR_MODULE = "src/repro/core/kvcache.py"
 RELEASE_METHODS = {"decref", "free", "trim"}
+# plain functions that RELEASE their page arguments: handoff_refs moves
+# ownership across allocators, dropping the source ref per page
+RELEASE_FUNCS = {"handoff_refs"}
 INTERNAL_ATTRS = {"_free", "_rc", "_free_set", "_scale_dirty"}
 MUTATING_METHODS = {"append", "pop", "add", "remove", "discard", "clear",
                     "extend", "update", "insert", "difference_update"}
@@ -97,8 +105,11 @@ class _FnScan(ast.NodeVisitor):
         for a in list(node.args) + [k.value for k in node.keywords]:
             arg_names |= _base_names(a)
         arg_names.discard("self")
+        fname = node.func.id if isinstance(node.func, ast.Name) else ""
         if meth == "incref":
             self.increfs.append((node, arg_names))
+        elif meth in RELEASE_FUNCS or fname in RELEASE_FUNCS:
+            self.released |= arg_names
         elif meth in RELEASE_METHODS:
             self.released |= arg_names
             if meth == "free":

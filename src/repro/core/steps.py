@@ -926,3 +926,70 @@ def zero_paged_cache_for(cfg, plan, mesh, n_pages, page_size,
     tmpl = kvcache.paged_cache_template(cfg, plan, lay, n_pages, page_size,
                                         n_replicas, n_slabs)
     return kvcache.zero_paged_cache(tmpl)
+
+
+_STEP_SET_MEMO: dict = {}
+
+
+def paged_step_set(cfg, plan, mesh, batch: int, n_pages: int, page_size: int,
+                   n_max_pages: int, prefill_chunk: int, n_replicas: int = 1,
+                   n_slabs: int = 0, speculative: int = 0) -> dict:
+    """-> memoized dict of the jitted paged-engine steps for one shape:
+    ``{"prefill", "decode", "copy", "cross_write", "verify", "transfer"}``
+    (entries the arch/shape doesn't need are None).
+
+    jax.jit caches compilations per *function object*, so an engine that
+    rebuilds its steps on every membership change (``scale_to`` /
+    ``kill_replica``) would recompile from scratch each time it revisits a
+    replica count.  Memoizing the jitted closures on the step shape makes
+    repeated reconfiguration — and fault-injection suites that build many
+    engines over the same config — pay compilation once per distinct
+    (cfg, mesh, plan-shape, batch, pool, n_replicas) tuple.  The memo holds
+    cfg/mesh strongly so their ids cannot be recycled under a live key.
+
+    Donation matches the engine's call conventions: every step that
+    threads the cache donates it (arg 1 after params, or arg 0 for the
+    param-less copy/transfer steps)."""
+    key = (id(cfg), id(mesh), plan.tp, str(plan.kv_cache_dtype),
+           str(plan.ssm_cache_dtype), tuple(plan.dp_axes), batch, n_pages,
+           page_size, n_max_pages, prefill_chunk, n_replicas, n_slabs,
+           speculative)
+    hit = _STEP_SET_MEMO.get(key)
+    if hit is not None:
+        return hit[2]
+    has_ssm, has_cross = paged_extra_inputs(cfg)
+    prof = kvcache.cache_profile(cfg)
+    slabs = n_slabs if has_ssm else 0
+    dec, _, _ = make_paged_decode_step(cfg, plan, mesh, batch, n_pages,
+                                       page_size, n_max_pages,
+                                       n_replicas=n_replicas, n_slabs=slabs)
+    chunk_fn, _, _ = make_prefill_chunk_step(cfg, plan, mesh, prefill_chunk,
+                                             n_pages, page_size, n_max_pages,
+                                             n_replicas=n_replicas,
+                                             n_slabs=slabs)
+    out = {"decode": jax.jit(dec, donate_argnums=(1,)),
+           "prefill": jax.jit(chunk_fn, donate_argnums=(1,)),
+           "copy": None, "cross_write": None, "verify": None,
+           "transfer": None}
+    if "kv" in prof:
+        cp, _, _ = make_page_copy_step(cfg, plan, mesh, n_pages, page_size,
+                                       n_replicas=n_replicas, n_slabs=slabs)
+        out["copy"] = jax.jit(cp, donate_argnums=(0,))
+    if has_cross:
+        cw, _, _ = make_cross_kv_write_step(cfg, plan, mesh, n_pages,
+                                            page_size, n_replicas=n_replicas,
+                                            n_slabs=slabs)
+        out["cross_write"] = jax.jit(cw, donate_argnums=(1,))
+    if speculative > 0:
+        vf, _, _ = make_verify_step(cfg, plan, mesh, batch, speculative + 1,
+                                    n_pages, page_size, n_max_pages,
+                                    n_replicas=n_replicas)
+        out["verify"] = jax.jit(vf, donate_argnums=(1,))
+    if n_replicas > 1 and not has_ssm and not has_cross:
+        tf, _, _ = make_page_transfer_step(cfg, plan, mesh, n_pages,
+                                           page_size, n_max_pages,
+                                           n_replicas=n_replicas)
+        out["transfer"] = jax.jit(tf, donate_argnums=(0,))
+    # hold cfg/mesh strongly so their ids cannot be recycled under the key
+    _STEP_SET_MEMO[key] = (cfg, mesh, out)
+    return out

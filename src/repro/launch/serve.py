@@ -49,6 +49,15 @@ by default (``--overlap``); ``--no-overlap`` restores the serial
 plan-dispatch-collect loop for debugging — outputs are token-identical
 either way, and the report adds the device-busy fraction plus plan-ahead
 / invalidation counts.
+
+``--scale-events T:N[,T:N...]`` (paged engine, no ``--disagg``) replays
+an elastic membership schedule under the live load: at tick T the engine
+scales to N replicas (``scale_to`` — leaving replicas drain by migrating
+their in-flight KV page runs to survivors), and a ``T:kill:R`` entry
+instead injects a replica-R failure (``kill_replica`` — its requests
+re-admit elsewhere as re-prefills).  Outputs stay token-identical to an
+undisturbed run; the report adds migration / recovery counters
+(README §Elastic serving).
 """
 from __future__ import annotations
 
@@ -83,6 +92,11 @@ def main(argv=None):
                          "replicas hand finished page runs to D decode "
                          "replicas via the compiled page-transfer step "
                          "(requires --dp P+D)")
+    ap.add_argument("--scale-events", default=None, metavar="T:N[,T:N...]",
+                    help="elastic membership schedule (paged engine, no "
+                         "--disagg): at tick T scale to N replicas; a "
+                         "'T:kill:R' entry injects a replica-R failure "
+                         "instead (e.g. 8:1,12:kill:0,16:2)")
     ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="plan tick t+1 while tick t's steps run on device "
@@ -150,6 +164,29 @@ def main(argv=None):
             ap.error(f"--disagg {args.disagg} needs --dp {p + d} "
                      f"(P + D replicas, both >= 1)")
         disagg = (p, d)
+    scale_events = []
+    if args.scale_events:
+        if not (args.paged or args.prefix_cache or args.dp > 1
+                or args.speculative):
+            ap.error("--scale-events requires the paged engine (--paged)")
+        if disagg is not None:
+            ap.error("--scale-events cannot combine with --disagg "
+                     "(role sets are static)")
+        for part in args.scale_events.split(","):
+            bits = part.split(":")
+            try:
+                if len(bits) == 2:
+                    scale_events.append((int(bits[0]), "scale",
+                                         int(bits[1])))
+                elif len(bits) == 3 and bits[1] == "kill":
+                    scale_events.append((int(bits[0]), "kill",
+                                         int(bits[2])))
+                else:
+                    raise ValueError(part)
+            except ValueError:
+                ap.error("--scale-events expects comma-separated T:N or "
+                         "T:kill:R entries")
+        scale_events.sort()
 
     import jax
     from repro.configs import get_config, reduced
@@ -192,6 +229,15 @@ def main(argv=None):
             prefix_cache=args.prefix_cache, scheduler=scheduler,
             rng_seed=args.seed, dp=args.dp, speculative=args.speculative,
             overlap=args.overlap, disagg=disagg)
+        if scale_events:
+            def membership_hook(e, _pending=list(scale_events)):
+                while _pending and e.stats.ticks >= _pending[0][0]:
+                    _, kind, val = _pending.pop(0)
+                    if kind == "scale":
+                        e.scale_to(val)
+                    else:
+                        e.kill_replica(val)
+            engine.membership_hook = membership_hook
     else:
         dshape = ShapeConfig("serve", "decode", args.seq_budget, args.slots)
         pshape = ShapeConfig("serve1", "decode", args.seq_budget, 1)
@@ -251,6 +297,11 @@ def main(argv=None):
         print(f"disagg(P={disagg[0]} D={disagg[1]}): "
               f"handoffs={stats.handoffs} "
               f"pages_transferred={stats.pages_transferred}")
+    if args.scale_events:
+        print(f"elastic: scale_events={stats.scale_events} "
+              f"crashes={stats.crashes} migrations={stats.migrations} "
+              f"migrated_pages={stats.migrated_pages} "
+              f"readmitted={stats.readmitted} dp_final={engine.R}")
     if args.high_priority_every:
         for label, cls in (("high", 10), ("low", 0)):
             ts = [stats.request_ttft[r.rid] for r in reqs

@@ -1,2 +1,4 @@
-from repro.runtime.ft import FTConfig, Heartbeat, supervise  # noqa: F401
+from repro.runtime.elastic import reshard_replica_pools  # noqa: F401
+from repro.runtime.ft import (FTConfig, Heartbeat, RecoveryReport,  # noqa: F401
+                              plan_recovery, supervise)
 from repro.runtime.straggler import HedgedRouter  # noqa: F401

@@ -6,12 +6,20 @@ the controller picks the largest (dp', tp') grid the survivors support,
 every worker restores/reshards via ``checkpoint.resharding``, and training
 continues — no manual relayout.  TP changes are exact (canonicalize ->
 re-scatter); DP changes only affect batch placement.
+
+Serving-side membership changes reuse the same canonicalize -> re-scatter
+shape: ``reshard_replica_pools`` maps the replica axis of every paged-cache
+leaf (axis 1 by the ``paged_cache_template`` contract) from the surviving
+replica indices onto a fresh pool of the new width, zero-filling joined
+replicas.  ``ServingEngine.scale_to`` / ``kill_replica`` drive it.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 
 from repro.checkpoint.resharding import reshard_params
 from repro.core.partition import ShardingPlan
@@ -48,3 +56,30 @@ def rebuild(cfg, params, plan_from: ShardingPlan, devices=None,
     plan_to = dec.plan
     new_params = reshard_params(params, cfg, plan_from, plan_to)
     return mesh, plan_to, new_params
+
+
+def reshard_replica_pools(cache, keep: Sequence[int], new_n_replicas: int):
+    """Re-scatter a paged serving cache onto a new replica count.
+
+    ``keep`` lists the surviving old replica indices in their *new* order:
+    survivor ``keep[j]`` becomes replica ``j`` of the new pool.  Replicas
+    ``len(keep)..new_n_replicas-1`` are freshly joined and start zeroed
+    (their allocators hand out pages into untouched rows, so zeroing is
+    only hygiene — it matches ``zero_paged_cache_for``'s starting state).
+
+    Every leaf of a paged cache carries the replica dimension at axis 1
+    (``kvcache.paged_cache_template`` stacks replicas there for pools,
+    scales, slabs, and slab scales alike), which is what lets one gather /
+    scatter handle all state kinds uniformly — the serving twin of
+    ``reshard_params``'s canonicalize -> re-scatter.
+    """
+    if not 0 < len(keep) <= new_n_replicas:
+        raise ValueError(f"keep={list(keep)!r} incompatible with "
+                         f"new_n_replicas={new_n_replicas}")
+    idx = jnp.asarray(list(keep), dtype=jnp.int32)
+
+    def _leaf(v):
+        out = jnp.zeros((v.shape[0], new_n_replicas) + v.shape[2:], v.dtype)
+        return out.at[:, :idx.shape[0]].set(jnp.take(v, idx, axis=1))
+
+    return jax.tree_util.tree_map(_leaf, cache)

@@ -6,6 +6,14 @@ checkpoint -> training resumes (data pipeline state included, so sample
 order is preserved).  This module implements the single-process slice of
 that contract; ``tests/test_fault_tolerance.py`` proves it by SIGKILLing a
 training subprocess mid-run and verifying bit-exact continuation.
+
+The serving twin is ``plan_recovery``: when a replica dies without a
+drain, its device state (page pools, allocator refcounts) is presumed
+lost, but every request's prompt and emitted tokens live host-side in the
+``Request`` objects.  ``plan_recovery`` orders the dead replica's orphans
+deterministically — active slots by admission sequence, then the queue in
+queue order — so ``ServingEngine.kill_replica`` re-admits them elsewhere
+as prefix-cache-style re-prefills and recovery is schedule-reproducible.
 """
 from __future__ import annotations
 
@@ -13,8 +21,8 @@ import os
 import subprocess
 import threading
 import time
-from dataclasses import dataclass
-from typing import Callable, Optional
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
 
 
 @dataclass
@@ -53,6 +61,40 @@ class Heartbeat:
             if time.monotonic() - self._last > self.timeout:
                 self.on_stall()
                 return
+
+
+@dataclass
+class RecoveryReport:
+    """What ``plan_recovery`` decided for one dead replica: which requests
+    were orphaned in flight vs. still queued, in re-admission order."""
+    replica: int
+    active_rids: List[int] = field(default_factory=list)
+    queued_rids: List[int] = field(default_factory=list)
+
+    @property
+    def n_orphans(self) -> int:
+        return len(self.active_rids) + len(self.queued_rids)
+
+
+def plan_recovery(replica: int, active_admissions, queued_requests):
+    """-> (requests, RecoveryReport) for a replica that died mid-flight.
+
+    ``active_admissions`` are the replica's in-flight admissions (objects
+    with ``.seq`` and ``.req``); ``queued_requests`` its not-yet-admitted
+    requests.  Active requests are ordered by admission sequence (oldest
+    first — they have emitted the most tokens and re-prefill the most
+    state, so they re-enter the queue ahead of everything newer), then the
+    queue follows in its own order.  The ordering is a pure function of
+    the dead replica's state, never of dict/set iteration, so crash
+    recovery replays identically under a fixed fault schedule.
+    """
+    active = sorted(active_admissions, key=lambda adm: adm.seq)
+    requests = [adm.req for adm in active] + list(queued_requests)
+    report = RecoveryReport(
+        replica=replica,
+        active_rids=[adm.req.rid for adm in active],
+        queued_rids=[req.rid for req in queued_requests])
+    return requests, report
 
 
 def supervise(cmd: list, cfg: Optional[FTConfig] = None,

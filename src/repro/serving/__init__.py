@@ -4,7 +4,8 @@ ARCHITECTURE.md for the end-to-end map and per-module invariants."""
 from repro.serving.engine import (EngineStats, ReplicaStats, Request,  # noqa: F401
                                   ServingEngine)
 from repro.serving.policies import FairScheduler, PriorityScheduler  # noqa: F401
-from repro.serving.prefix_cache import CrossKVCache, RadixPrefixCache  # noqa: F401
+from repro.serving.prefix_cache import (CrossKVCache, HostSpillStore,  # noqa: F401
+                                        RadixPrefixCache)
 from repro.serving.router import Router  # noqa: F401
 from repro.serving.sampler import SamplerConfig, sample_from_logits  # noqa: F401
 from repro.serving.scheduler import Admission, FCFSScheduler, Scheduler  # noqa: F401

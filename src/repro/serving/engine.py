@@ -149,6 +149,24 @@ Enforced-by: analysis:async-barrier
 Invariant: speculative headroom return is a refcount trim, never a
     free() — headroom pages may be shared with the radix prefix cache.
 Enforced-by: tests/test_spec_decode.py::test_trim_releases_shared_tail_without_freeing, analysis:shared-free
+
+Invariant: no request is lost across a membership change — ``scale_to``
+    migrates (or preempt-requeues) every in-flight request of a leaving
+    replica and re-places its queue on survivors, and ``kill_replica``
+    re-admits the dead replica's orphans as re-prefills from host-side
+    request state (prompt + emitted tokens); every submitted request
+    completes, with greedy outputs token-identical to an uninterrupted
+    dp=1 run and sampled outputs schedule-invariant (per-request RNG
+    streams advance one draw per emitted token on every path).
+Enforced-by: tests/test_elastic_serving.py::test_chaos_schedules_complete_and_match_oracle
+
+Invariant: membership changes barrier first — ``scale_to`` and
+    ``kill_replica`` consume all in-flight dispatched work (``_barrier``)
+    before touching pools, allocators, or slot state, so a migration,
+    reshard, or recovery never races a dispatched step's page
+    references; the overlap pipeline and the serial oracle take the
+    same elastic path.
+Enforced-by: tests/test_elastic_serving.py::test_scale_down_mid_overlap_completes_all, analysis:async-barrier
 """
 from __future__ import annotations
 
@@ -163,8 +181,8 @@ import numpy as np
 from repro.core.kvcache import (SCRATCH_PAGE, SCRATCH_SLAB, PageAllocator,
                                 SlabAllocator, cache_profile,
                                 kv_pool_is_quantized, pages_needed)
-from repro.serving.prefix_cache import (CrossKVCache, PromptLookupDraft,
-                                        RadixPrefixCache)
+from repro.serving.prefix_cache import (CrossKVCache, HostSpillStore,
+                                        PromptLookupDraft, RadixPrefixCache)
 from repro.serving.router import Router
 from repro.serving.sampler import (SamplerConfig, sample_from_logits,
                                    speculative_sample)
@@ -242,6 +260,11 @@ class EngineStats:
     spec_denied: int = 0               # admissions denied draft headroom
     handoffs: int = 0                  # prefill->decode page-run transfers
     pages_transferred: int = 0         # pages moved across replicas
+    scale_events: int = 0              # scale_to membership changes applied
+    crashes: int = 0                   # kill_replica recoveries
+    migrations: int = 0                # in-flight slots moved off a drain
+    migrated_pages: int = 0            # pages those migrations carried
+    readmitted: int = 0                # requests re-placed by drain/recovery
     plan_ahead_ticks: int = 0          # plan phases run with work in flight
     plan_invalidations: int = 0        # speculative plan entries rolled back
     collect_wait_s: float = 0.0        # host time blocked at collect points
@@ -296,7 +319,8 @@ class ServingEngine:
                  prefix_cache: bool = False, scheduler=None,
                  rng_seed: int = 0, dp: int = 1, n_slabs: int = 0,
                  speculative: int = 0, verify_fn=None,
-                 overlap: bool = True, disagg=None, transfer_fn=None):
+                 overlap: bool = True, disagg=None, transfer_fn=None,
+                 spill=None):
         from repro.core import steps as _steps
         self.cfg, self.plan, self.mesh = cfg, plan, mesh
         assert dp >= 1, dp
@@ -378,6 +402,8 @@ class ServingEngine:
             self.chunk = prefill_chunk
             self.n_max_pages = seq_budget // page_size
             self.n_slabs = n_slabs or batch_slots + 1
+            self.n_pool_pages = n_pages        # per-replica pool size
+            self._prefix_cache_enabled = bool(prefix_cache)
             self.n_cross_pages = pages_needed(cfg.enc_seq_len, page_size) \
                 if self.has_cross else 0
             # replica-local pools: refcounts never cross a replica boundary
@@ -396,23 +422,6 @@ class ServingEngine:
             self.cache = _steps.zero_paged_cache_for(
                 cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
                 n_slabs=self.n_slabs if self.has_ssm else 0)
-            self.copy_fn = None        # COW only exists with self-KV pools
-            if "kv" in prof:
-                copy_fn, _, _ = _steps.make_page_copy_step(
-                    cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
-                    n_slabs=self.n_slabs if self.has_ssm else 0)
-                self.copy_fn = jax.jit(copy_fn, donate_argnums=(0,))
-            if self.has_cross:
-                cross_fn, _, _ = _steps.make_cross_kv_write_step(
-                    cfg, plan, mesh, n_pages, page_size, n_replicas=dp,
-                    n_slabs=self.n_slabs if self.has_ssm else 0)
-                self.cross_write_fn = jax.jit(cross_fn, donate_argnums=(1,))
-            self.transfer_fn = transfer_fn
-            if self.disagg is not None and self.transfer_fn is None:
-                tfn, _, _ = _steps.make_page_transfer_step(
-                    cfg, plan, mesh, n_pages, page_size, self.n_max_pages,
-                    n_replicas=dp)
-                self.transfer_fn = jax.jit(tfn, donate_argnums=(0,))
         else:
             assert not prefix_cache, "prefix cache requires the paged engine"
             self.cache = _steps.zero_cache_for(cfg, plan, mesh, batch_slots,
@@ -432,13 +441,15 @@ class ServingEngine:
                     f"attention-only decoders (cache kinds {sorted(prof)}) "
                     f"— SSM recurrences advance one token per step and "
                     f"enc-dec verify is not implemented")
-            if self.verify_fn is None:
-                vfn, _, _ = _steps.make_verify_step(
-                    cfg, plan, mesh, batch_slots, self.speculative + 1,
-                    n_pages, page_size, self.n_max_pages, n_replicas=dp)
-                self.verify_fn = jax.jit(vfn, donate_argnums=(1,))
             self.draft_sources = [PromptLookupDraft(self.prefix_caches[r])
                                   for r in range(dp)]
+        if paged:
+            # compiled steps come from the memoized per-shape step set
+            # (steps.paged_step_set): repeated engine builds and elastic
+            # membership changes reuse XLA executables instead of
+            # recompiling.  Explicitly passed functions win.
+            self._wire_steps(prefill_fn=prefill_fn, decode_fn=decode_fn,
+                             verify_fn=verify_fn, transfer_fn=transfer_fn)
         # ``scheduler`` is either a ready instance (dp=1 only) or a factory
         # (a Scheduler subclass / functools.partial): factories receive the
         # engine-owned shared state, so callers can pass e.g.
@@ -490,6 +501,14 @@ class ServingEngine:
         # prefill-role slots whose finished page runs await a decode home
         self._inflight: Optional[dict] = None
         self._pending_handoffs: List[int] = []
+        # elastic membership: scale_to/kill_replica need the factory to
+        # build schedulers for joined replicas; a hook installed here fires
+        # at the top of every paged tick (fault injection, ops triggers)
+        self._sched_factory = None if isinstance(sched, Scheduler) else sched
+        self.membership_hook = None
+        self.spill = spill
+        if paged and spill is not None:
+            self._restore_from_spill(spill)
 
     @classmethod
     def build_paged(cls, cfg, plan, mesh, batch_slots: int, seq_budget: int,
@@ -499,10 +518,12 @@ class ServingEngine:
                     prefix_cache: bool = False, scheduler=None,
                     rng_seed: int = 0, dp: int = 1, n_slabs: int = 0,
                     speculative: int = 0, overlap: bool = True,
-                    disagg=None):
-        """Construct a paged engine, compiling its (chunk, decode) pair
-        (plus the cross-KV write step for enc-dec archs, and the k+1-token
-        verify step when ``speculative=k`` > 0).
+                    disagg=None, spill=None):
+        """Construct a paged engine; its compiled (chunk, decode) pair
+        (plus the cross-KV write step for enc-dec archs, the k+1-token
+        verify step when ``speculative=k`` > 0, and the page-transfer step
+        for dp>1 attention-only configs) comes from the memoized per-shape
+        step set, so repeated builds reuse XLA executables.
 
         ``n_pages`` is the PER-REPLICA pool size and defaults to full
         occupancy (every slot at budget, plus every slot's cross-KV pages
@@ -511,7 +532,8 @@ class ServingEngine:
         (SSM/hybrid archs) defaults to one recurrent-state slab per slot
         plus the scratch slab.  ``dp`` replicas each get ``batch_slots``
         slots and their own pool, driven together by one compiled step
-        pair."""
+        pair.  ``spill`` (a ``HostSpillStore``) warm-starts the prefix /
+        cross caches from a previous engine's spilled page payloads."""
         from repro.core import steps as _steps
         from repro.core.kvcache import paged_cache_supported
         ok, why = paged_cache_supported(cfg)
@@ -523,27 +545,14 @@ class ServingEngine:
         n_cross = pages_needed(cfg.enc_seq_len, page_size) if has_cross else 0
         n_pages = n_pages or batch_slots * (n_max + n_cross) + 1
         n_slabs = n_slabs or batch_slots + 1
-        dec, _, _ = _steps.make_paged_decode_step(
-            cfg, plan, mesh, batch_slots, n_pages, page_size, n_max,
-            n_replicas=dp, n_slabs=n_slabs if has_ssm else 0)
-        chunk_fn, _, _ = _steps.make_prefill_chunk_step(
-            cfg, plan, mesh, prefill_chunk, n_pages, page_size, n_max,
-            n_replicas=dp, n_slabs=n_slabs if has_ssm else 0)
-        ver = None
-        if speculative > 0:
-            vfn, _, _ = _steps.make_verify_step(
-                cfg, plan, mesh, batch_slots, speculative + 1, n_pages,
-                page_size, n_max, n_replicas=dp)
-            ver = jax.jit(vfn, donate_argnums=(1,))
         return cls(cfg, plan, mesh, batch_slots, seq_budget, params,
-                   jax.jit(chunk_fn, donate_argnums=(1,)),
-                   jax.jit(dec, donate_argnums=(1,)), eos_id=eos_id,
+                   None, None, eos_id=eos_id,
                    sampler=sampler, paged=True, page_size=page_size,
                    n_pages=n_pages, prefill_chunk=prefill_chunk,
                    prefix_cache=prefix_cache, scheduler=scheduler,
                    rng_seed=rng_seed, dp=dp, n_slabs=n_slabs,
-                   speculative=speculative, verify_fn=ver,
-                   overlap=overlap, disagg=disagg)
+                   speculative=speculative, overlap=overlap, disagg=disagg,
+                   spill=spill)
 
     # ------------------------------------------------------------------ API
     @property
@@ -580,6 +589,27 @@ class ServingEngine:
     def _gslot(self, r: int, local: int) -> int:
         """Replica-local slot index -> global slot index."""
         return r * self.Bp + local
+
+    def _wire_steps(self, prefill_fn=None, decode_fn=None, verify_fn=None,
+                    transfer_fn=None):
+        """(Re)wire the paged engine's compiled steps from the memoized
+        per-shape step set for the CURRENT replica count ``self.R`` —
+        called at construction and again after every membership change.
+        Explicitly passed functions win over the set's entries."""
+        from repro.core import steps as _steps
+        sset = _steps.paged_step_set(
+            self.cfg, self.plan, self.mesh, self.Bp, self.n_pool_pages,
+            self.page_size, self.n_max_pages, self.chunk,
+            n_replicas=self.R,
+            n_slabs=self.n_slabs if self.has_ssm else 0,
+            speculative=self.speculative)
+        self.prefill_fn = prefill_fn or sset["prefill"]
+        self.decode_fn = decode_fn or sset["decode"]
+        self.copy_fn = sset["copy"]    # COW only exists with self-KV pools
+        if self.has_cross:
+            self.cross_write_fn = sset["cross_write"]
+        self.verify_fn = verify_fn or sset["verify"]
+        self.transfer_fn = transfer_fn or sset["transfer"]
 
     # ------------------------------------------------- cache-tree plumbing
     def _kind_leaves(self, kind: str):
@@ -805,6 +835,373 @@ class ServingEngine:
             if b in self._pending_handoffs:
                 self._pending_handoffs.remove(b)
 
+    # --------------------------------------------------- elastic membership
+    def scale_to(self, dp_new: int):
+        """Live dp reconfiguration: grow or shrink to ``dp_new`` replicas
+        without dropping an in-flight request.  Scale-down drains the
+        leaving replicas first — each active slot migrates its resident KV
+        pages to a survivor via the compiled page-transfer step (int8
+        scale rows ride along; host refcounts hand off atomically), or
+        falls back to preempt-and-requeue where migration cannot apply
+        (SSM/enc-dec state, no free slot, destination pool pressure) —
+        then queued requests re-route to survivors and, with a spill store
+        attached, the leaving replicas' cached pages spill to host.  Both
+        directions then rebuild: pools canonicalize and re-scatter to the
+        new width, survivors keep their allocator/cache/scheduler objects
+        (page ids and refcounts stay valid), joined replicas start fresh,
+        and the compiled steps rewire from the memoized step set."""
+        from repro.core import steps as _steps
+        if not self.paged:
+            raise ValueError("elastic membership requires the paged engine")
+        if self.disagg is not None:
+            raise ValueError(
+                "scale_to under disaggregation is unsupported: a disagg "
+                "engine's prefill/decode role sets are static")
+        if self._sched_factory is None:
+            raise ValueError(
+                "scale_to needs a scheduler factory, not a pre-built "
+                "instance (joined replicas build their own scheduler)")
+        dp_new = int(dp_new)
+        nd = _steps.n_dp(self.mesh, self.plan)
+        if dp_new < 1 or dp_new % nd:
+            raise ValueError(
+                f"dp_new={dp_new} must be a positive multiple of the "
+                f"mesh's data extent ({nd}) so every replica keeps a "
+                f"whole device group")
+        if dp_new == self.R:
+            return
+        self._barrier()               # in-flight work settles first
+        self.stats.scale_events += 1
+        if dp_new > self.R:
+            self._rebuild(list(range(self.R)), dp_new)
+        else:
+            keep = list(range(dp_new))
+            self._drain_replicas(list(range(dp_new, self.R)), keep)
+            self._rebuild(keep, dp_new)
+        if self.spill is not None:
+            self._restore_from_spill(self.spill)
+
+    def kill_replica(self, r: int):
+        """Injected (or detected) replica FAILURE — no drain: replica
+        ``r``'s device pages, allocator and scheduler state are presumed
+        lost.  Recovery (runtime.ft.plan_recovery) re-admits its orphans
+        on the survivors: active slots replay prompt + emitted tokens as a
+        re-prefill from host-side request state (exact continuation — the
+        per-request RNG stream has advanced one draw per emitted token
+        either way), queued requests simply re-route.  -> the
+        ``RecoveryReport``."""
+        from repro.core import steps as _steps
+        from repro.runtime.ft import plan_recovery
+        if not self.paged:
+            raise ValueError("elastic membership requires the paged engine")
+        if self.disagg is not None:
+            raise ValueError(
+                "kill_replica under disaggregation is unsupported: a "
+                "disagg engine's prefill/decode role sets are static")
+        if self._sched_factory is None:
+            raise ValueError(
+                "kill_replica needs a scheduler factory, not a pre-built "
+                "instance")
+        if not 0 <= r < self.R:
+            raise ValueError(f"replica {r} out of range (dp={self.R})")
+        nd = _steps.n_dp(self.mesh, self.plan)
+        if self.R < 2 or (self.R - 1) % nd:
+            raise ValueError(
+                f"cannot lose a replica at dp={self.R}: the survivor "
+                f"count must stay a positive multiple of the mesh's data "
+                f"extent ({nd})")
+        self._barrier()
+        self.stats.crashes += 1
+        active = [self.admissions[b] for b in self._rep_slots(r)
+                  if self.admissions[b] is not None]
+        reqs, report = plan_recovery(r, active,
+                                     self.scheds[r].pending_requests())
+        # the dead replica's pool/allocator/caches are discarded wholesale:
+        # clear its slots WITHOUT routing through on_finish (there is no
+        # surviving refcount state to release into)
+        for b in self._rep_slots(r):
+            if self.admissions[b] is not None:
+                self._clear_slot(b)
+        self._rebuild([x for x in range(self.R) if x != r], self.R - 1)
+        for req in reqs:
+            self._place(req)
+        return report
+
+    def _drain_replicas(self, leaving: List[int], keep: List[int]):
+        """Empty the leaving replicas: mark them unroutable, migrate (or
+        preempt-requeue) every active slot, re-place their queues on
+        survivors, and spill their cached pages to host if a spill store
+        is attached.  Runs fully synchronously (callers barrier first)."""
+        for r in leaving:
+            self.router.mark_draining(r)
+        for r in leaving:
+            for b in self._rep_slots(r):
+                if self.admissions[b] is None:
+                    continue
+                if not self._migrate_slot(b, keep):
+                    # fallback: evict onto the leaving scheduler's queue
+                    # (SSM slots checkpoint to host); re-placed below
+                    self._preempt_now(b)
+        for r in leaving:
+            for req in self.scheds[r].take_queued():
+                self._place(req)
+        if self.spill is not None:
+            # spill BEFORE the rebuild discards the leaving replicas'
+            # pool rows — preempt-donated progress is captured too
+            self.spill_state(self.spill, replicas=leaving)
+
+    def _migrate_slot(self, b_src: int, keep: List[int]) -> bool:
+        """Move global slot ``b_src``'s in-flight request to a surviving
+        replica: claim a destination admission, copy the resident pages
+        with the compiled transfer step (scale rows ride along), hand the
+        refcounts off atomically, and install the slot state (pos /
+        prefill progress / last token) at the destination.  -> False when
+        migration cannot apply (state kinds that do not transfer, no free
+        slot, destination pool pressure, or a transfer fault) — the
+        destination claim, if any, is rolled back and the caller falls
+        back to preemption; the source slot is left untouched."""
+        if self.has_ssm or self.has_cross or self.transfer_fn is None:
+            return False
+        src_r = self._rep(b_src)
+        adm = self.admissions[b_src]
+        req = adm.req
+        in_prefill = self.slot_state[b_src] == "prefill"
+        n = int(self.prefill_done[b_src]) if in_prefill \
+            else int(self.pos[b_src])
+        cand = [r for r in keep
+                if any(self.admissions[b] is None
+                       for b in self._rep_slots(r))]
+        if not cand:
+            return False
+        dst_r = self.router.decode_placement(cand)
+        local = min(b - dst_r * self.Bp for b in self._rep_slots(dst_r)
+                    if self.admissions[b] is None)
+        dst_adm = self.scheds[dst_r].plan_migration(local, req, n)
+        if dst_adm is None:
+            return False              # destination pool pressure
+        k = pages_needed(n, self.page_size)
+        if k:
+            src_pages = np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
+            dst_pages = np.full(self.n_max_pages, SCRATCH_PAGE, np.int32)
+            src_pages[:k] = adm.pages[:k]
+            dst_pages[:k] = dst_adm.pages[:k]
+            try:
+                with self.mesh:
+                    self.cache = self.transfer_fn(
+                        self.cache, jnp.int32(src_r), jnp.int32(dst_r),
+                        jnp.asarray(src_pages), jnp.asarray(dst_pages))
+            except Exception:
+                # mid-handoff fault: no refcount moved yet (handoff_refs
+                # runs only after the transfer), so retiring the claimed
+                # destination admission restores the pre-migration state
+                # exactly — no orphan pages on either side
+                self.scheds[dst_r].on_finish(dst_adm)
+                return False
+        self.scheds[src_r].on_migrated(adm, k, self.allocators[dst_r],
+                                       dst_adm.pages[:k])
+        b_dst = self._gslot(dst_r, dst_adm.slot)
+        self.admissions[b_dst] = dst_adm
+        self.slot_state[b_dst] = "prefill" if in_prefill else "decode"
+        self.pos[b_dst] = self.pos[b_src]
+        self.prefill_done[b_dst] = self.prefill_done[b_src]
+        self.last_token[b_dst] = self.last_token[b_src]
+        self.spec_miss[b_dst] = self.spec_miss[b_src]
+        self._clear_slot(b_src)
+        req.replica = dst_r
+        self.router.commit(req, dst_r)
+        self.stats.migrations += 1
+        self.stats.migrated_pages += k
+        self.stats.pages_transferred += k
+        self.stats.replicas[src_r].pages_transferred_out += k
+        self.stats.replicas[dst_r].pages_transferred_in += k
+        self.stats.replicas[dst_r].routed += 1
+        return True
+
+    def _place(self, req: Request):
+        """Re-place an already-submitted request after a membership
+        change: route (draining/dead replicas excluded), enqueue, and
+        keep its identity — rid, RNG stream, submit time and emitted
+        tokens all persist, so this is invisible to the client beyond
+        latency.  Feasibility cannot newly fail: every replica pool has
+        the same size, and the effective prompt grows exactly as
+        remaining new tokens shrink."""
+        r = self.router.route(req)
+        self.scheds[r].submit(req)
+        self.router.commit(req, r)
+        req.replica = r
+        self.stats.replicas[r].routed += 1
+        self.stats.readmitted += 1
+
+    def _rebuild(self, keep: List[int], dp_new: int):
+        """Re-stamp the engine for ``dp_new`` replicas with survivors
+        ``keep`` (old indices, order preserved): pools canonicalize and
+        re-scatter (runtime.elastic.reshard_replica_pools), surviving
+        replicas carry their allocator / cache / scheduler OBJECTS over
+        (page ids and refcounts stay valid — position in the pool dim is
+        all that changes), joined replicas start fresh, slot arrays remap,
+        the router rebuilds (drain marks clear by construction; recent-
+        routing windows and counters carry over), and the compiled steps
+        rewire from the memoized step set."""
+        from repro.runtime.elastic import reshard_replica_pools
+        assert self._inflight is None and not self._pending_handoffs
+        keep = list(keep)
+        n_keep = len(keep)
+        self.cache = reshard_replica_pools(self.cache, keep, dp_new)
+        self.allocators = [self.allocators[r] for r in keep] + \
+            [PageAllocator(self.n_pool_pages)
+             for _ in range(dp_new - n_keep)]
+        self.prefix_caches = [self.prefix_caches[r] for r in keep] + \
+            [RadixPrefixCache(a, self.page_size)
+             if self._prefix_cache_enabled else None
+             for a in self.allocators[n_keep:]]
+        if self.has_ssm:
+            self.slab_allocators = \
+                [self.slab_allocators[r] for r in keep] + \
+                [SlabAllocator(self.n_slabs)
+                 for _ in range(dp_new - n_keep)]
+        if self.has_cross:
+            self.cross_caches = [self.cross_caches[r] for r in keep] + \
+                [CrossKVCache(a) for a in self.allocators[n_keep:]]
+        self.scheds = [self.scheds[r] for r in keep]
+        prof = cache_profile(self.cfg)
+        for j in range(n_keep, dp_new):
+            self.scheds.append(self._sched_factory(
+                seq_budget=self.S,
+                allocator=self.allocators[j],
+                page_size=self.page_size,
+                prefix_cache=self.prefix_caches[j],
+                slab_allocator=(self.slab_allocators[j]
+                                if self.has_ssm else None),
+                cross_cache=(self.cross_caches[j]
+                             if self.has_cross else None),
+                cross_pages_per_req=(self.n_cross_pages
+                                     if self.has_cross else 0),
+                kv_pages="kv" in prof,
+                spec_tokens=self.speculative,
+                stats=self.stats))
+        self.stats.replicas = [self.stats.replicas[r] for r in keep] + \
+            [ReplicaStats() for _ in range(dp_new - n_keep)]
+        for j, s in enumerate(self.scheds):
+            # survivors' ReplicaStats objects moved with them; only the
+            # joined replicas' schedulers need wiring
+            if getattr(s, "replica_stats", None) is None:
+                s.replica_stats = self.stats.replicas[j]
+        # remap slot arrays: old global slot keep[j]*Bp+l -> new j*Bp+l
+        old = (self.admissions, self.pos, self.last_token, self.spec_miss,
+               self.slot_state, self.prefill_done)
+        B_new = self.Bp * dp_new
+        self.admissions = [None] * B_new
+        self.pos = np.zeros(B_new, np.int32)
+        self.last_token = np.zeros(B_new, np.int32)
+        self.spec_miss = np.zeros(B_new, np.int32)
+        self.slot_state = [None] * B_new
+        self.prefill_done = np.zeros(B_new, np.int32)
+        for j, r_old in enumerate(keep):
+            for ll in range(self.Bp):
+                ob, nb = r_old * self.Bp + ll, j * self.Bp + ll
+                self.admissions[nb] = old[0][ob]
+                self.pos[nb] = old[1][ob]
+                self.last_token[nb] = old[2][ob]
+                self.spec_miss[nb] = old[3][ob]
+                self.slot_state[nb] = old[4][ob]
+                self.prefill_done[nb] = old[5][ob]
+                if old[0][ob] is not None:
+                    old[0][ob].req.replica = j
+        for j, s in enumerate(self.scheds):
+            for req in s.pending_requests():
+                req.replica = j
+        old_router = self.router
+        self.R, self.B = dp_new, B_new
+        self.router = Router(self.scheds, self.allocators,
+                             self.prefix_caches, self.page_size,
+                             cross_caches=self.cross_caches or None)
+        for j, r_old in enumerate(keep):
+            self.router._recent[j].extend(old_router._recent[r_old])
+            self.router._recent_frames[j].extend(
+                old_router._recent_frames[r_old])
+        self.router.affinity_routed = old_router.affinity_routed
+        if self.speculative > 0:
+            self.draft_sources = [PromptLookupDraft(self.prefix_caches[r])
+                                  for r in range(dp_new)]
+        self._wire_steps()
+
+    # -------------------------------------------------------- host spill
+    def spill_state(self, store=None, replicas: Optional[List[int]] = None):
+        """Spill the radix-prefix and cross-KV cache contents of
+        ``replicas`` (default: all) to a host-side ``HostSpillStore``:
+        page payloads — int8 payloads and their per-(page, slot) scale
+        rows included, byte-for-byte — keyed by token path / frames
+        digest.  The pool itself is untouched (spilling takes no refs);
+        restore re-allocates fresh pages wherever the store is next
+        attached.  -> the store."""
+        assert self.paged, "spill requires the paged engine"
+        store = store if store is not None else HostSpillStore()
+        for r in (replicas if replicas is not None else range(self.R)):
+            pc = self.prefix_caches[r]
+            if pc is not None:
+                for toks, pages in pc.entries():
+                    pids = jnp.asarray(np.asarray(pages, np.int32))
+                    store.put_prefix(
+                        toks, len(pages),
+                        [np.asarray(leaf[:, r, pids])
+                         for leaf in self._kind_leaves("kv")])
+            if self.has_cross:
+                for key, pages in self.cross_caches[r].entries():
+                    pids = jnp.asarray(np.asarray(pages, np.int32))
+                    store.put_cross(
+                        key, len(pages),
+                        [np.asarray(leaf[:, r, pids])
+                         for leaf in self._kind_leaves("cross")])
+        return store
+
+    def _restore_from_spill(self, store):
+        """Reload spilled cache entries into the least-loaded replicas:
+        allocate fresh pages, write the stored payloads bit-for-bit
+        (restored pages stay referenced, so recycled-page scale-row
+        resets never touch them), and register with the replica's cache.
+        Entries already resident, or not fitting the pool right now, are
+        skipped — the spill store is a warm-start, not a ledger."""
+        if store is None or not self.paged:
+            return
+        cand = [r for r in range(self.R)
+                if self.prefix_caches[r] is not None]
+        if cand:
+            for toks, (k, payloads) in store.radix.items():
+                prompt = list(toks)
+                if any(self.prefix_caches[c].lookup(prompt)[0] >= len(toks)
+                       for c in cand):
+                    continue          # already resident somewhere
+                r = min(cand, key=lambda rr: (self.router.page_load(rr), rr))
+                pages = self.allocators[r].alloc(k)
+                if pages is None:
+                    continue          # pool pressure: stay spilled
+                pids = jnp.asarray(np.asarray(pages, np.int32))
+                self._update_kind(
+                    "kv", lambda leaf, i, r=r, pids=pids, pl=payloads:
+                    leaf.at[:, r, pids].set(jnp.asarray(pl[i])))
+                self.prefix_caches[r].insert(prompt, pages)
+                # the cache holds its own refs now; shared-prefix pages we
+                # over-allocated drop to rc 0 here and recycle harmlessly
+                self.allocators[r].decref(pages)
+                store.pages_restored += k
+        if self.has_cross:
+            for key, (k, payloads) in store.cross.items():
+                if any(xc is not None and xc.has(key)
+                       for xc in self.cross_caches):
+                    continue
+                r = min(range(self.R),
+                        key=lambda rr: (self.router.page_load(rr), rr))
+                pages = self.allocators[r].alloc(k)
+                if pages is None:
+                    continue
+                pids = jnp.asarray(np.asarray(pages, np.int32))
+                self._update_kind(
+                    "cross", lambda leaf, i, r=r, pids=pids, pl=payloads:
+                    leaf.at[:, r, pids].set(jnp.asarray(pl[i])))
+                self.cross_caches[r].insert(key, pages)
+                self.allocators[r].decref(pages)
+                store.pages_restored += k
+
     # ----------------------------------------------------------------- tick
     def tick(self):
         if self.paged:
@@ -901,8 +1298,13 @@ class ServingEngine:
         collect (the tick's single barrier — consume the PREVIOUS tick's
         dispatched results), apply deferred preemption verdicts, dispatch
         this tick's compiled steps.  ``overlap=False`` collects the fresh
-        dispatch immediately — the serial oracle."""
+        dispatch immediately — the serial oracle.  A membership hook (set
+        by fault-injection harnesses or ops triggers) fires first, before
+        any planning — scale_to/kill_replica barrier internally, so the
+        hook sees (and leaves) a fully synchronous engine."""
         t0 = time.monotonic()
+        if self.membership_hook is not None:
+            self.membership_hook(self)
         tick_plan = self._plan_phase()
         self._collect_phase()
         self._run_deferred_preempts(tick_plan)

@@ -271,3 +271,9 @@ class FairScheduler(FCFSScheduler):
         c = self._client(req)
         self._ensure(c)
         self._queues[c].appendleft(req)
+
+    def _clear_queue(self) -> None:
+        # drain-time takeover: clients keep their deficit/rotation state
+        # (an idle client's deficit resets at the next _select_next visit)
+        for q in self._queues.values():
+            q.clear()

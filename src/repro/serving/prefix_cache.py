@@ -58,6 +58,13 @@ Invariant: LRU eviction — under pool pressure, leaf runs are evicted
     (refcount == 1), so each eviction frees exactly ``len(node.pages)``
     pages.
 Enforced-by: tests/test_prefix_cache.py::test_radix_lru_eviction_and_shared_protection
+
+Invariant: spill restore is byte-identical — page payloads spilled to the
+    ``HostSpillStore`` (including int8 payloads and their per-(page, slot)
+    scale rows) restore bit-for-bit into freshly allocated pages of any
+    replica, so a prefix/cross hit after a membership change reads exactly
+    the bytes the original prefill/encode wrote.
+Enforced-by: tests/test_elastic_serving.py::test_spill_restore_int8_byte_identity
 """
 from __future__ import annotations
 
@@ -131,6 +138,21 @@ class RadixPrefixCache:
             n = stack.pop()
             stack.extend(n.children.values())
             yield n
+
+    def entries(self):
+        """Yield (token_path, pages) per *leaf*, root-to-leaf accumulated.
+
+        Leaves subsume every interior node's prefix, so spilling leaf paths
+        alone captures the whole resident corpus; re-inserting them rebuilds
+        the interior structure through the normal radix splits."""
+        stack = [((), [], self.root)]
+        while stack:
+            prefix, ppages, node = stack.pop()
+            path = prefix + node.key
+            pages = ppages + node.pages
+            if not node.children and node is not self.root:
+                yield path, pages
+            stack.extend((path, pages, ch) for ch in node.children.values())
 
     # -------------------------------------------------------------- lookup
     def lookup(self, tokens) -> Tuple[int, List[int]]:
@@ -357,6 +379,11 @@ class CrossKVCache:
         self._entries[key] = [list(pages), self._clock]
         return True
 
+    def entries(self):
+        """Yield (digest, pages) for every cached encode."""
+        for key, (pages, _) in self._entries.items():
+            yield key, list(pages)
+
     def evict(self, n_pages: int) -> int:
         """Evict LRU unshared entries until >= n_pages freed (or nothing
         evictable remains).  -> pages actually freed."""
@@ -375,3 +402,41 @@ class CrossKVCache:
             freed += len(pages)
             self.evictions += 1
         return freed
+
+
+class HostSpillStore:
+    """Host-side persistence for hot cache entries across membership changes.
+
+    Device page pools die with their replica rows (drain shrinks the pool;
+    a crash loses the rows outright), but the *payload bytes* of radix-
+    prefix and cross-KV entries are pure functions of tokens/frames — so
+    the engine gathers them to host numpy before a reconfiguration
+    (``ServingEngine.spill_state``) and re-inserts them into survivors'
+    pools afterwards (``_restore_from_spill``).  Keys are the caches' own
+    identities: the leaf token path for radix entries, the frames digest
+    for cross entries.  Payload lists hold one numpy array per cache leaf
+    of the kind, gathered as ``leaf[:, r, pids]`` — int8 payloads and
+    their scale rows are separate leaves and ride along byte-identically
+    (the SSM preemption stash proved this gather/restore mechanism).
+
+    A plain dict with overwrite semantics: re-spilling a key replaces the
+    entry (latest bytes win), and the store survives engine teardown so a
+    fresh engine can warm-start from it (``spill=`` ctor knob)."""
+
+    def __init__(self):
+        self.radix: dict = {}        # token path tuple -> (n_pages, payloads)
+        self.cross: dict = {}        # frames digest    -> (n_pages, payloads)
+        self.pages_saved = 0
+        self.pages_restored = 0
+
+    def put_prefix(self, tokens: tuple, n_pages: int, payloads):
+        self.radix[tuple(int(t) for t in tokens)] = (n_pages, payloads)
+        self.pages_saved += n_pages
+
+    def put_cross(self, key: str, n_pages: int, payloads):
+        self.cross[key] = (n_pages, payloads)
+        self.pages_saved += n_pages
+
+    @property
+    def n_entries(self) -> int:
+        return len(self.radix) + len(self.cross)

@@ -46,6 +46,13 @@ Invariant: role-aware placement — under disaggregation (``roles`` set)
     replicas; neither set is ever empty and a request crosses the
     boundary exactly once, via the page-transfer handoff.
 Enforced-by: tests/test_page_transfer.py::test_disagg_dp2_matches_serial_dp1_greedy
+
+Invariant: no placement onto a draining replica — once
+    ``mark_draining`` names a replica, ``route`` and ``decode_placement``
+    exclude it even when it momentarily reports the least page load (a
+    drain empties it), so admissions racing an active ``scale_to`` land
+    on survivors and are never migrated twice.
+Enforced-by: tests/test_elastic_serving.py::test_admission_during_active_drain_avoids_draining_replica
 """
 from __future__ import annotations
 
@@ -82,6 +89,7 @@ class Router:
         else:
             self._admit_set = list(range(self.n_replicas))
         self.affinity_routed = 0       # requests placed by prefix affinity
+        self._draining: set = set()    # replicas mid-drain: never place here
         # prompts recently routed per replica: speculative affinity for
         # bursts whose shared prefix hasn't finished prefilling anywhere yet
         self._recent = [collections.deque(maxlen=recent_window)
@@ -135,12 +143,17 @@ class Router:
             out.append(s)
         return out
 
+    def mark_draining(self, r: int) -> None:
+        """Exclude replica r from all future placement (an active
+        ``scale_to`` is migrating its state away).  Rebuilding the router
+        after the membership change clears the mark by construction."""
+        self._draining.add(r)
+
     def route(self, req) -> int:
         """Pick a replica for ``req`` (no state change beyond LRU clocks);
         call ``commit`` once the replica's scheduler accepted it."""
-        if self.n_replicas == 1:
-            return 0
-        admit = self._admit_set
+        admit = [r for r in self._admit_set if r not in self._draining] \
+            or self._admit_set
         if len(admit) == 1:
             return admit[0]
         hits = self.affinity(req)
@@ -157,7 +170,9 @@ class Router:
         page load, index tiebreak (the same deterministic rule as cold
         routing).  ``candidates`` is the engine's per-tick set of
         decode-role replicas that still have a free slot."""
-        return min(candidates, key=lambda rr: (self.page_load(rr), rr))
+        cand = [r for r in candidates if r not in self._draining] \
+            or list(candidates)
+        return min(cand, key=lambda rr: (self.page_load(rr), rr))
 
     def commit(self, req, r: int) -> None:
         """Record a successful placement: ``req``'s prompt (and frames

@@ -66,6 +66,16 @@ Invariant: role budgeting conserves the pool — a prefill-role admission
     per-replica leak freedom survives any interleaving of handoffs and
     preemptions.
 Enforced-by: tests/test_page_transfer.py::test_handoff_preemption_mid_transfer, analysis:refcount-leak
+
+Invariant: migration moves ownership exactly once — a drain-time
+    migration (``plan_migration`` → device transfer → ``on_migrated``)
+    either completes, handing the resident pages' references to the
+    destination allocator and decref'ing the unfilled horizon tail at the
+    source, or rolls back atomically (the destination admission is
+    retired via ``on_finish`` and the source slot's estate is untouched);
+    no interleaving of a crash with an in-progress handoff can orphan or
+    double-free a page.
+Enforced-by: tests/test_elastic_serving.py::test_crash_during_handoff_rolls_back, analysis:refcount-leak
 """
 from __future__ import annotations
 
@@ -602,3 +612,73 @@ class FCFSScheduler(Scheduler):
         admissions hold no slab or cross pages — disaggregation is gated
         to attention-only archs — so the page refs are the whole estate."""
         handoff_refs(self.allocator, adm.pages, dst_allocator, dst_pages)
+
+    # ------------------------------------------------- elastic membership
+    def plan_migration(self, slot: int, req,
+                       resident_len: int) -> Optional[Admission]:
+        """Destination-side admission for a drain-time slot migration.
+
+        Unlike ``plan_handoff`` (whose source is a finished prefill, so
+        resident + remaining covers everything), a migrating slot may
+        still be mid-prefill — so this budgets the full cold-admission
+        horizon, ``len(effective_prompt) + remaining_new_tokens`` (the
+        constant submit-time budget).  That total always covers the
+        resident pages: a slot's resident length never exceeds its
+        effective prompt + emitted tokens.  All-or-nothing: returning
+        None makes the engine fall back to preempt-and-requeue."""
+        total = pages_needed(len(effective_prompt(req)) +
+                             remaining_new_tokens(req), self.psz)
+        alloc = self.allocator
+        fresh = alloc.alloc(total)
+        if fresh is None and self._can_reclaim(total):
+            self._reclaim(total - alloc.n_free)
+            fresh = alloc.alloc(total)
+        if fresh is None:
+            return None
+        spec, spec_pages = False, []
+        if self.spec_tokens > 0:
+            n_max = self.seq_budget // self.psz
+            extra = min(pages_needed(len(effective_prompt(req)) +
+                                     remaining_new_tokens(req) +
+                                     self.spec_tokens, self.psz),
+                        n_max) - total
+            spec_pages = alloc.alloc(extra)
+            if spec_pages is None:
+                spec_pages = []
+                for st in (self.stats, self.replica_stats):
+                    if st is not None:
+                        st.spec_denied += 1
+            else:
+                spec = True
+        adm = Admission(slot=slot, req=req, pages=fresh + spec_pages,
+                        cached_len=resident_len, spec=spec)
+        adm.seq = self._adm_seq
+        self._adm_seq += 1
+        return adm
+
+    def on_migrated(self, adm: Admission, k: int, dst_allocator,
+                    dst_pages) -> None:
+        """The engine transferred adm's first ``k`` (resident) pages to
+        another replica: hand exactly those references over atomically,
+        then drop the unfilled horizon tail.  The tail goes through
+        ``decref`` rather than ``free`` — a preemption elsewhere may have
+        donated overlapping pages to the radix cache by now."""
+        if k:
+            handoff_refs(self.allocator, adm.pages[:k],
+                         dst_allocator, dst_pages)
+        self.allocator.decref(adm.pages[k:])
+        if adm.cross_pages is not None:
+            self.allocator.decref(adm.cross_pages)
+
+    def take_queued(self) -> List:
+        """Drain-time queue takeover: every queued (not yet admitted)
+        request leaves this scheduler for re-placement elsewhere; the
+        backlog counter returns to zero with them."""
+        out = self.pending_requests()
+        for req in out:
+            self.backlog_pages -= self._req_pages(req)
+        self._clear_queue()
+        return out
+
+    def _clear_queue(self) -> None:
+        self.queue.clear()

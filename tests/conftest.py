@@ -11,6 +11,13 @@ import pytest  # noqa: E402
 from repro import compat  # noqa: E402
 
 
+def pytest_addoption(parser):
+    parser.addoption("--chaos-seed", type=int, default=0,
+                     help="base seed for the elastic-serving chaos schedule "
+                          "sweep (tests/test_elastic_serving.py); pair with "
+                          "CHAOS_SCHEDULES=<n> to resize the sweep")
+
+
 @pytest.fixture(scope="session")
 def mesh1():
     return compat.make_mesh((1, 1), ("data", "model"),
